@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: dataset loading, timing, artifact output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable
+
+import numpy as np
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def save_artifact(name: str, payload: Dict) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def load_datasets(codes: Iterable[str] | None = None):
+    """Paper Table I analogues, reordered with RCM like the paper's ParMETIS
+    preprocessing step (ordering quality differs; see DESIGN.md §7)."""
+    from repro.sparse import paper_dataset_analogue, permute_csr, rcm_order
+    from repro.sparse.matrices import PAPER_DATASETS
+
+    out = {}
+    for code in (codes or PAPER_DATASETS):
+        a = paper_dataset_analogue(code)
+        out[code] = permute_csr(a, rcm_order(a))
+    return out
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def print_table(title: str, header, rows) -> None:
+    print(f"\n## {title}")
+    print("| " + " | ".join(header) + " |")
+    print("|" + "|".join(["---"] * len(header)) + "|")
+    for r in rows:
+        print("| " + " | ".join(str(x) for x in r) + " |")

@@ -1,0 +1,116 @@
+"""Hillclimb harness (§Perf): lower one cell variant, print the three
+roofline terms and the largest collectives with shapes — the 'profile' that
+grounds each hypothesis (no real TPU, so the lowered IR is the evidence).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen3-14b \
+        --shape train_4k [--set key=value ...]
+
+``--set`` patches ModelConfig fields (e.g. --set micro_steps=2
+--set seq_shard_attention=True) so variants are reproducible one-liners.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+
+
+def top_collectives(hlo: str, k: int = 8):
+    from repro.launch.costs import _COLL_RE, _shape_bytes
+    items = []
+    for m in _COLL_RE.finditer(hlo):
+        items.append((_shape_bytes(m.group(1)), m.group(2)))
+    items.sort(reverse=True)
+    return items[:k]
+
+
+def run_cell(arch: str, shape_name: str, patches: dict, dump_hlo: str = ""):
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch import costs as C
+    from repro.launch.mesh import make_production_mesh
+    from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops
+
+    cfg = get_config(arch)
+    if patches:
+        cfg = dataclasses.replace(cfg, **patches)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    res = C.cell_costs(cfg, mesh, shape, dtype=jnp.bfloat16)
+    tot = res["totals_per_device"]
+    t_c = tot["flops"] / PEAK_FLOPS
+    t_l = tot["collective_bytes"] / LINK_BW
+    mf = model_flops(cfg, shape)
+    n_dev = mesh.devices.size
+    print(f"\n=== {arch} x {shape_name} patches={patches} ===")
+    print(f"compute {t_c:.3f}s | collective {t_l:.3f}s | "
+          f"flops/dev {tot['flops']:.3e} | coll GB/dev "
+          f"{tot['collective_bytes']/1e9:.2f}")
+    print(f"useful/HLO = {mf / max(1, tot['flops'] * n_dev) * 100:.1f}%  "
+          f"bound-MFU = {mf / max(t_c, t_l) / (n_dev * PEAK_FLOPS) * 100:.2f}%")
+    for name, comp in res["components"].items():
+        if name == "ssm_scan_correction" or "collectives" not in comp:
+            continue
+        print(f"  [{name}] x{comp['multiplier']}  flops {comp['flops']:.3e}  "
+              f"coll {comp['collectives']['total_bytes']/1e9:.3f} GB  "
+              f"{comp['collectives']['counts_by_op']}")
+    return res
+
+
+def profile_component(arch: str, shape_name: str, patches: dict,
+                      component: str = "group"):
+    """Print the largest collectives (with shapes) of one component."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch import costs as C
+    from repro.launch.mesh import make_production_mesh
+    import jax
+
+    cfg = get_config(arch)
+    if patches:
+        cfg = dataclasses.replace(cfg, **patches)
+    shape = SHAPES[shape_name]
+    micro = 1
+    if shape.kind == "train":
+        micro = max(1, cfg.micro_steps)
+        while shape.global_batch % micro:
+            micro //= 2
+    eff = dataclasses.replace(shape, global_batch=shape.global_batch // micro)
+    mesh = make_production_mesh()
+    if component == "group":
+        fn, structs, shards = C.group_component(cfg, mesh, eff, jnp.bfloat16, 1024)
+    elif component == "stem_head":
+        fn, structs, shards = C.stem_head_component(cfg, mesh, eff, jnp.bfloat16)
+    else:
+        fn, structs, shards = C.optimizer_component(cfg, mesh, jnp.bfloat16)
+    hlo = jax.jit(fn, in_shardings=shards).lower(*structs).compile().as_text()
+    print(f"--- top collectives in [{component}] ({arch} x {shape_name}) ---")
+    for size, op in top_collectives(hlo, 12):
+        print(f"  {size/1e6:9.1f} MB  {op}")
+    return hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--profile", default="")
+    args = ap.parse_args()
+    patches = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        patches[k] = eval(v)  # noqa: S307 — operator tool, trusted input
+    if args.profile:
+        profile_component(args.arch, args.shape, patches, args.profile)
+    else:
+        run_cell(args.arch, args.shape, patches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Roofline analysis (§g): three terms per (arch x shape x mesh) cell.
+
+Reads the dry-run artifacts (launch/dryrun.py) and derives, per device:
+
+  compute term     = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term      = HBM_traffic_per_device / HBM_bw
+  collective term  = collective_bytes_per_device / link_bw
+
+HLO_FLOPs come from the compositional cost extraction (exact; scan bodies
+multiplied — see launch/costs.py).  Collective bytes are parsed from the
+partitioned HLO (per-device result shapes).  HBM traffic uses an *analytic
+minimum-traffic model* (below) because XLA:CPU's "bytes accessed" counts
+every instruction operand without fusion dedup (~5x inflated, measured) and
+the jnp attention path round-trips score matrices that the Pallas kernels
+keep in VMEM on the real target; both raw numbers are reported alongside.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI.  Per-device collective bytes / link_bw equals the assignment's
+collective_bytes_global / (chips x link_bw).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def _clamped_micro(cfg, shape) -> int:
+    micro = max(1, cfg.micro_steps) if shape.kind == "train" else 1
+    while shape.global_batch % micro:
+        micro //= 2
+    return max(1, micro)
+
+
+def analytic_hbm_traffic(cfg, shape, rec: Dict) -> float:
+    """Per-device HBM bytes for one step — minimum-traffic model.
+
+    Assumes the Pallas kernels for attention (scores stay in VMEM, K/V
+    stream once per query block) and the SSM scans (state resident in
+    VMEM); weights are read once per forward/backward pass; remat re-reads
+    them once more; optimizer states stream once.
+    """
+    sb = rec.get("state_bytes_per_device", {})
+    p = sb.get("params", 0.0)
+    o = sb.get("opt", 0.0)
+    caches = sb.get("caches", 0.0)
+    n_batch_shards = 16 if rec["mesh"] == "pod" else 32
+    if shape.global_batch % n_batch_shards:
+        n_batch_shards = 1
+    d = cfg.d_model
+    micro = _clamped_micro(cfg, shape)
+    tokens_loc = shape.global_batch * shape.seq_len / n_batch_shards
+    tok_m = tokens_loc / micro
+    q_chunk = 1024
+
+    n_attn = sum(1 for m, _ in cfg.full_pattern if m in ("attn", "local")) * cfg.n_groups
+    n_local = sum(1 for m, _ in cfg.full_pattern if m == "local") * cfg.n_groups
+    n_mla = sum(1 for m, _ in cfg.full_pattern if m == "mla") * cfg.n_groups
+    n_moe = sum(1 for _, f in cfg.full_pattern if f == "moe") * cfg.n_groups
+    kv_w = 2 * cfg.n_kv_heads * cfg.hd * 2                      # k+v bytes/token
+    lat_w = (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2 if cfg.mla else 0
+
+    if shape.kind == "train":
+        s = shape.seq_len
+        t = 0.0
+        t += micro * 3 * p                     # param reads: fwd + remat + bwd
+        t += micro * 4 * p                     # f32 grad-accum buffer r/w
+        t += 2 * o + p                         # optimizer stream + param write
+        stash = cfg.n_groups * tok_m * d * 2
+        t += micro * 2 * stash                 # remat stash w+r
+        # attention K/V streaming (batch rows per device = tok_m / s)
+        rows = max(1.0, tok_m / s)
+        t += micro * n_attn * rows * (s / q_chunk) * s * kv_w * 0.5   # causal half
+        if n_local:
+            t -= micro * n_local * rows * (s / q_chunk) * max(0, s - cfg.sliding_window - q_chunk) * kv_w * 0.5
+        t += micro * n_mla * rows * (s / q_chunk) * s * lat_w * 0.5
+        if cfg.moe:
+            disp = tok_m * cfg.moe.top_k * cfg.moe.capacity_factor * d * 2 / 16
+            t += micro * 4 * n_moe * disp
+        # chunked CE logits r/w (f32, vocab model-sharded 16-way when divisible)
+        v_loc = cfg.vocab / (16 if cfg.vocab % 16 == 0 else 1)
+        t += micro * 2 * tok_m * v_loc * 4
+        t += micro * 3 * tok_m * d * 2         # embed fwd + bwd scatter
+        t *= 2.0                               # bwd activation traffic ~ fwd
+        return t
+
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        rows = max(1.0, tokens_loc / s)
+        t = p
+        n_layers = len(cfg.full_pattern) * cfg.n_groups
+        t += n_layers * 4 * tokens_loc * d * 2          # layer activations r/w
+        t += n_attn * rows * (s / q_chunk) * s * kv_w * 0.5
+        if n_local:
+            t -= n_local * rows * (s / q_chunk) * max(0, s - cfg.sliding_window - q_chunk) * kv_w * 0.5
+        t += n_mla * rows * (s / q_chunk) * s * lat_w * 0.5
+        t += caches                                     # cache write
+        if cfg.moe:
+            t += 4 * n_moe * tokens_loc * cfg.moe.top_k * cfg.moe.capacity_factor * d * 2 / 16
+        return t
+
+    # decode: params read (all resident experts in the dense-EP impl),
+    # full cache read + slot write, small activations
+    return p + caches + 64 * d * 2 * len(cfg.full_pattern) * cfg.n_groups
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (inference),
+    plus the attention score/value matmuls (2*2*T_ctx*d_attn per token per
+    attention layer, causal-halved), which 6ND ignores and which dominate at
+    32k+ context."""
+    n = cfg.active_param_count()
+    d_attn = cfg.n_heads * cfg.hd
+    s = shape.seq_len
+    per_layer_ctx = {"attn": s, "local": min(s, cfg.sliding_window),
+                     "mla": s}
+    if shape.kind == "decode":
+        toks = shape.global_batch
+        attn = sum(4.0 * per_layer_ctx[m] * d_attn
+                   for m, _ in cfg.full_pattern if m in per_layer_ctx
+                   ) * cfg.n_groups * toks
+        return 2.0 * n * toks + attn
+    toks = shape.global_batch * s
+    attn = sum(4.0 * per_layer_ctx[m] * 0.5 * d_attn
+               for m, _ in cfg.full_pattern if m in per_layer_ctx
+               ) * cfg.n_groups * toks
+    mult = 3.0 if shape.kind == "train" else 1.0
+    base = (6.0 if shape.kind == "train" else 2.0) * n * toks
+    return base + mult * attn
+
+
+def suggest(dom: str, cfg, shape, frac: float) -> str:
+    if dom == "collective":
+        return ("shrink/overlap the TP all-gathers (fuse collectives with the "
+                "following matmul, or move FSDP gathers off the critical path)")
+    if dom == "memory":
+        if shape.kind == "decode":
+            return ("decode is cache/weight-bandwidth bound: shard the cache "
+                    "over more axes or batch more requests per chip")
+        return ("cut optimizer/stash traffic: fewer micro-steps, bf16 opt "
+                "states, or offload the master copy")
+    if frac < 0.2:
+        return ("compute-bound but far off peak: the model axis does "
+                "redundant work for this arch — reshard batch over "
+                "(data x model) or shrink TP")
+    return "compute-bound near peak: increase per-chip batch or fuse pointwise ops"
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    from repro.configs.base import SHAPES, get_config
+    if "error" in rec or "skipped" in rec or rec.get("arch") == "gsofa":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    costs = rec.get("costs")
+    if costs:
+        fl = costs["totals_per_device"]["flops"]
+        coll = costs["totals_per_device"]["collective_bytes"]
+        xla_bytes = costs["totals_per_device"]["hbm_bytes"]
+    else:
+        fl = rec["full_step"]["flops"]
+        coll = rec["full_step"]["collectives"]["total_bytes"]
+        xla_bytes = rec["full_step"]["hbm_bytes"]
+    mem_bytes = analytic_hbm_traffic(cfg, shape, rec)
+    t_c = fl / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_l = coll / LINK_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    n_dev = rec["n_devices"]
+    useful = mf / max(1.0, fl * n_dev)
+    step_time = max(t_c, t_m, t_l)           # perfect-overlap bound
+    mfu = mf / max(1e-9, step_time) / (n_dev * PEAK_FLOPS)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+        "dominant": dom, "model_flops": mf, "hlo_flops_per_dev": fl,
+        "useful_flop_ratio": useful, "roofline_mfu": mfu,
+        "mem_bytes_analytic": mem_bytes, "mem_bytes_xla": xla_bytes,
+        "coll_bytes_per_dev": coll,
+        "fits_hbm_16g": rec["memory"]["peak_bytes_est"] < 16e9,
+        "peak_bytes": rec["memory"]["peak_bytes_est"],
+        "suggestion": suggest(dom, cfg, shape, mfu),
+    }
+
+
+def load_all(mesh: str = "pod") -> Dict[str, Dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        r = analyze_record(rec)
+        if r:
+            out[f"{r['arch']}__{r['shape']}"] = r
+    return out
+
+
+def main() -> None:
+    rows = load_all("pod")
+    if not rows:
+        print("no dry-run artifacts found — run: python -m repro.launch.dryrun --sweep")
+        return
+    hdr = ["cell", "compute_s", "memory_s", "collective_s", "dominant",
+           "MFU-bound", "useful/HLO", "fits16G"]
+    print("| " + " | ".join(hdr) + " |")
+    print("|" + "|".join(["---"] * len(hdr)) + "|")
+    for key, r in sorted(rows.items()):
+        print(f"| {key} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+              f"{r['collective_s']:.3f} | {r['dominant']} | "
+              f"{r['roofline_mfu']*100:.1f}% | {r['useful_flop_ratio']*100:.1f}% | "
+              f"{'Y' if r['fits_hbm_16g'] else 'N'} |")
+    with open(os.path.join(os.path.dirname(ART_DIR), "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure + the roofline reader.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --only speedup,space
+
+Paper-figure map:
+  workload     -> Fig 3   (per-source workload growth)
+  balance      -> Figs 7/8/11 (combined traversal + interleaved assignment)
+  concurrency  -> Fig 12  (throughput vs #C)
+  speedup      -> Fig 10  (GSoFa vs sequential fill2 baseline)
+  space        -> Figs 13/14/16 + Tables II/III (memory management)
+  roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    from benchmarks import (bench_balance, bench_concurrency, bench_space,
+                            bench_speedup, bench_workload, roofline)
+    suites = [
+        ("workload", bench_workload.main),
+        ("balance", bench_balance.main),
+        ("concurrency", bench_concurrency.main),
+        ("speedup", bench_speedup.main),
+        ("space", bench_space.main),
+        ("roofline", roofline.main),
+    ]
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        try:
+            fn()
+        except Exception as e:  # keep the suite running; report at the end
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+        print(f"[{name}] {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

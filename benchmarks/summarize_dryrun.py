@@ -1,0 +1,55 @@
+"""Tabulate the dry-run artifacts into EXPERIMENTS.md §Dry-run form.
+
+    PYTHONPATH=src python -m benchmarks.summarize_dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun_summary.md")
+
+
+def main() -> None:
+    rows, skips, errors = [], [], []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(path))
+        name = f"{rec.get('arch')} x {rec.get('shape')} x {rec.get('mesh')}"
+        if "error" in rec:
+            errors.append((name, rec["error"].splitlines()[-1][:120]))
+            continue
+        if "skipped" in rec:
+            skips.append((name, rec["skipped"]))
+            continue
+        mem = rec["memory"]
+        coll = rec["full_step"]["collectives"]["counts_by_op"]
+        rows.append([
+            name, rec.get("compile_s", "-"),
+            f"{mem['argument_bytes']/1e9:.2f}",
+            f"{mem['temp_bytes']/1e9:.2f}",
+            f"{(mem['peak_bytes_est'])/1e9:.2f}",
+            "Y" if mem["peak_bytes_est"] < 16e9 else "N",
+            " ".join(f"{k.split('-')[0]}-{k.split('-')[1] if '-' in k else k}:{v}"
+                     for k, v in sorted(coll.items())) or "-",
+        ])
+
+    lines = ["# Dry-run summary", "",
+             "| cell | compile s | args GB/dev | temp GB/dev | peak GB/dev | fits 16G | collectives (full-step HLO, scan bodies once) |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(x) for x in r) + " |")
+    lines += ["", f"**Compiled cells: {len(rows)}  skips: {len(skips)}  "
+              f"errors: {len(errors)}**", "", "## Documented skips", ""]
+    lines += [f"* {n}: {why}" for n, why in skips]
+    if errors:
+        lines += ["", "## Errors", ""] + [f"* {n}: {e}" for n, e in errors]
+    text = "\n".join(lines)
+    with open(OUT, "w") as f:
+        f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

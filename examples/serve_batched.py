@@ -1,0 +1,30 @@
+"""Batched serving example (deliverable b): prefill + greedy decode with a
+fixed-shape continuous batch, on any of the ten architectures.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-7b
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b
+
+(Reduced configs so CPU runs in seconds; the same steps lower on the
+512-chip production mesh in launch/dryrun.py.)  Shows that attention-cache,
+MLA-latent, sliding-window-ring, and SSM-state serving all share one engine.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--reduced",
+                "--requests", "4", "--prompt-len", "24", "--gen-len", "12"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end training driver (deliverable b): the ~100M-class smollm-135m
+architecture trained for a few hundred steps on the synthetic pipeline.
+
+    PYTHONPATH=src python examples/train_smollm.py --steps 300
+
+By default this runs the *reduced* config so CPU finishes in minutes while
+exercising the full production path (sharded step, ZeRO-1 AdamW, remat,
+checkpointing, restart).  Pass ``--full`` on real hardware for the actual
+135M model.  Loss on the structured synthetic stream drops well below the
+uniform floor ln(V), demonstrating real learning end to end.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ShapeConfig, get_config
+from repro.data import make_batch_for
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tf
+from repro.train.optimizer import AdamWConfig, init_adamw
+from repro.train.steps import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_smollm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")
+    if not args.full:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("ex", args.seq, args.batch, "train")
+    mesh = make_host_mesh()
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=20, decay_steps=args.steps)
+    step = make_train_step(cfg, mesh, shape, dtype=jnp.float32, acfg=acfg,
+                           donate=False)
+    params = tf.init_params(jax.random.key(0), cfg, jnp.float32)
+    opt = init_adamw(params)
+    print(f"training {cfg.name}{' (reduced)' if not args.full else ''}: "
+          f"{tf.n_params(params):,} params, ln(V)={np.log(cfg.vocab):.2f}")
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    t0 = time.time()
+    first = last = None
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch_for(cfg, shape, step=i).items()}
+        params, opt, m = step.fn(params, opt, batch)
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if (i + 1) % 25 == 0 or i == 0:
+            print(f"step {i+1:4d}  loss {loss:.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+        if (i + 1) % 100 == 0:
+            mgr.save(i + 1, (params, opt))
+    mgr.wait()
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"(uniform floor ln V = {np.log(cfg.vocab):.3f})")
+    # clear learning signal, scaled to the run length (full 300-step default
+    # drops >0.5 nats; short smoke runs proportionally less)
+    want = min(0.5, 0.004 * args.steps)
+    assert last < first - want, f"expected loss drop > {want:.2f}"
+
+
+if __name__ == "__main__":
+    main()

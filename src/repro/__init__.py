@@ -1,0 +1,7 @@
+"""repro: GSoFa (scalable sparse symbolic LU factorization) as a JAX framework.
+
+Layers: core (the paper's algorithm), sparse (matrix substrate), kernels
+(Pallas TPU), models/train/data/checkpoint/runtime (LM framework substrate),
+configs + launch (architectures, production mesh, dry-run drivers).
+"""
+__version__ = "1.0.0"

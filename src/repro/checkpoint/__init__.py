@@ -1,0 +1,8 @@
+"""Checkpointing: sharded save/restore, retention, async writes, elastic
+re-sharding onto a different mesh."""
+from repro.checkpoint.io import (
+    CheckpointManager, load_checkpoint, reshard_checkpoint, save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "reshard_checkpoint"]

@@ -1,0 +1,7 @@
+"""Architecture + shape configs."""
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, get_config, all_configs, cell_is_supported,
+)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config",
+           "all_configs", "cell_is_supported"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (definition in archs.py)."""
+from repro.configs.archs import gemma3_4b as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (definition in archs.py)."""
+from repro.configs.archs import jamba_1_5_large as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (definition in archs.py)."""
+from repro.configs.archs import smollm_135m as CONFIG
+
+__all__ = ["CONFIG"]

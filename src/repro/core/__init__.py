@@ -1,0 +1,13 @@
+"""GSoFa core: the paper's contribution as a composable JAX module.
+
+Public API: ``repro.core.symbolic.symbolic_factorize``.
+"""
+from repro.core.gsofa import (
+    SymbolicGraph, prepare_graph, gsofa_batch, fill_masks, row_counts,
+    dense_pattern, INF,
+)
+
+__all__ = [
+    "SymbolicGraph", "prepare_graph", "gsofa_batch", "fill_masks",
+    "row_counts", "dense_pattern", "INF",
+]

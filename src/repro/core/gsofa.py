@@ -1,0 +1,266 @@
+"""GSoFa: fine-grained parallel symbolic factorization as a batched JAX fixpoint.
+
+The paper's algorithm (Fig 4b) relaxes fill2's serial threshold order: all
+frontiers expand in parallel, guarded by the monotone label
+
+    maxId[v] = min over discovered paths src -> v of (max intermediate vertex id)
+
+updated with atomicMin and re-visitation until convergence.  On TPU there are
+no queues/atomics, so we adapt (DESIGN.md §2): one *superstep* relaxes every
+vertex synchronously (Jacobi); the atomicMin race becomes a min-reduction; the
+paper's re-visitation is the fixpoint iteration itself.  The label lattice and
+the fixpoint are identical, so the converged structure matches fill2 exactly
+(tests prove it).
+
+Key algebraic facts used:
+
+* direct edges carry label -1 (no intermediates), so the converged filled
+  structure of row ``src`` is simply ``{v != src : maxId[v] < v}`` — original
+  entries and fill-ins need no separate bookkeeping (the paper's fill[] array
+  folds away; it only de-duplicated queue insertions, which dense masks make
+  free).
+* only vertices ``u < src`` may expand (paper lines 6/15), which makes every
+  discovered path's intermediates < src; hence for v > src the Theorem-1 test
+  collapses to reachability, and for v < src it is ``maxId[v] < v``.
+* the paper's "line 9.5" optimization — never lower the label of a detected
+  fill — is the clamp ``prop(u) = max(u, maxId[u])``: once ``maxId[u] < u``,
+  further lowering cannot change what u propagates.  The Jacobi step applies
+  the clamp inherently, so the optimization is structural here.
+
+Three relaxation backends share this module's driver:
+  * ``ell``    — padded-ELL gather (irregular-friendly, default on CPU),
+  * ``dense``  — dense-tile min-max semiring product (jnp oracle of the kernel),
+  * ``kernel`` — the Pallas TPU kernel (kernels/gsofa_relax.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix, csr_to_ell, dense_block_adjacency, transpose_csr
+
+INF = jnp.int32(jnp.iinfo(jnp.int32).max)  # label "uninitialized / unreachable / masked"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SymbolicGraph:
+    """Device-ready graph data for the fixpoint."""
+
+    n: int
+    in_ell: jax.Array      # (V, K_in) int32 in-neighbors, padded with V
+    out_ell: jax.Array     # (V, K_out) int32 out-neighbors, padded with V
+    out_deg: jax.Array     # (V,) int32 true out-degrees (edge-check metric)
+    adj_dense: Optional[jax.Array] = None  # (Vp, Vp) uint8, u->v rows, for dense/kernel
+
+    def tree_flatten(self):
+        return (self.in_ell, self.out_ell, self.out_deg, self.adj_dense), self.n
+
+    @classmethod
+    def tree_unflatten(cls, n, children):
+        in_ell, out_ell, out_deg, adj_dense = children
+        return cls(n=n, in_ell=in_ell, out_ell=out_ell, out_deg=out_deg,
+                   adj_dense=adj_dense)
+
+
+def prepare_graph(a: CSRMatrix, *, dense_block: Optional[int] = None) -> SymbolicGraph:
+    at = transpose_csr(a)
+    in_ell, _ = csr_to_ell(at, pad_value=a.n, drop_diagonal=True)
+    out_ell, _ = csr_to_ell(a, pad_value=a.n, drop_diagonal=True)
+    deg = np.array([int(np.sum(a.row(i) != i)) for i in range(a.n)], dtype=np.int32)
+    adj = None
+    if dense_block is not None:
+        adj = jnp.asarray(dense_block_adjacency(a, dense_block))
+    return SymbolicGraph(
+        n=a.n,
+        in_ell=jnp.asarray(in_ell),
+        out_ell=jnp.asarray(out_ell),
+        out_deg=jnp.asarray(deg),
+        adj_dense=adj,
+    )
+
+
+# ---------------------------------------------------------------------------
+# label initialization & relaxation supersteps
+# ---------------------------------------------------------------------------
+
+def init_labels(graph: SymbolicGraph, srcs: jax.Array, *,
+                offset: jax.Array | int = 0,
+                stale_buf: Optional[jax.Array] = None,
+                nbrs: Optional[jax.Array] = None) -> jax.Array:
+    """(S, V) labels encoded as ``offset + maxId``: out-neighbors of each source
+    get ``offset - 1`` (direct edge, no intermediates); everything else is left
+    "uninitialized" — either explicit INF, or, when ``stale_buf`` is given, the
+    stale contents of an earlier label window (spaceopt.LabelArena), which by
+    construction are > offset + n and therefore read as uninitialized."""
+    v = graph.n
+    offset = jnp.asarray(offset, jnp.int32)
+    if nbrs is None:
+        nbrs = graph.out_ell[srcs]                      # (S, K_out), pad >= V
+
+    def one(nb, row):
+        lab = jnp.concatenate([row, jnp.full((1,), INF, jnp.int32)])
+        lab = lab.at[jnp.minimum(nb, jnp.int32(v))].set(offset - 1)
+        return lab[:v]
+
+    if stale_buf is None:
+        stale_buf = jnp.full((srcs.shape[0], v), INF, dtype=jnp.int32)
+    return jax.vmap(one)(nbrs, stale_buf)
+
+
+def compute_prop(labels: jax.Array, srcs: jax.Array, n: int,
+                 offset: jax.Array | int = 0) -> jax.Array:
+    """Clamped propagation values, (S, V), in the offset encoding:
+    ``max(offset + u, labels[u])`` for expandable u (u < src, label valid in the
+    current window), else INF.  Clamping stale/uninitialized labels to INF stops
+    values from dead windows from propagating (they stay put as inert storage)."""
+    offset = jnp.asarray(offset, jnp.int32)
+    u_ids = jnp.arange(n, dtype=jnp.int32)
+    valid = labels <= offset + jnp.int32(n)
+    prop = jnp.maximum(offset + u_ids[None, :], labels)
+    ok = valid & (u_ids[None, :] < srcs[:, None])
+    return jnp.where(ok, prop, INF)
+
+
+def relax_ell(prop: jax.Array, graph: SymbolicGraph) -> jax.Array:
+    """Candidate labels via ELL gather: cand[s, v] = min_{u in in-nbr(v)} prop[s, u]."""
+    prop_pad = jnp.concatenate(
+        [prop, jnp.full((prop.shape[0], 1), INF, dtype=jnp.int32)], axis=1)
+    gathered = jnp.take(prop_pad, graph.in_ell, axis=1)  # (S, V, K_in); pad idx V -> INF
+    return jnp.min(gathered, axis=2)
+
+
+def relax_dense(prop: jax.Array, graph: SymbolicGraph) -> jax.Array:
+    """Candidates as a (min, max)-semiring product against the dense adjacency.
+
+    Pure-jnp oracle of the Pallas kernel: cand[s, v] = min_u (adj[u, v] ?
+    prop[s, u] : INF).  ``prop`` already encodes the u < src mask and the
+    max(u, label) clamp, so the kernel is a pure masked-min contraction.
+    """
+    vp = graph.adj_dense.shape[0]
+    n = graph.n
+    if vp > n:
+        prop = jnp.pad(prop, ((0, 0), (0, vp - n)), constant_values=INF)
+    masked = jnp.where(graph.adj_dense[None, :, :] != 0, prop[:, :, None], INF)
+    return jnp.min(masked, axis=1)[:, :n]
+
+
+def relax_kernel(prop: jax.Array, graph: SymbolicGraph) -> jax.Array:
+    """Candidates via the Pallas TPU kernel (interpret-mode on CPU)."""
+    from repro.kernels import ops as kops
+
+    vp = graph.adj_dense.shape[0]
+    n = graph.n
+    if vp > n:
+        prop = jnp.pad(prop, ((0, 0), (0, vp - n)), constant_values=INF)
+    return kops.minmax_relax(prop, graph.adj_dense)[:, :n]
+
+
+_BACKENDS = {"ell": relax_ell, "dense": relax_dense, "kernel": relax_kernel}
+
+
+# ---------------------------------------------------------------------------
+# fixpoint driver
+# ---------------------------------------------------------------------------
+
+class FixpointResult(NamedTuple):
+    labels: jax.Array       # (S, V) converged maxId
+    iters: jax.Array        # () total supersteps for the batch
+    conv_iter: jax.Array    # (S,) last superstep at which each source was active
+    edge_checks: jax.Array  # (S,) paper's workload counter (frontier out-degrees)
+
+
+def fixpoint_impl(graph: SymbolicGraph, srcs: jax.Array, labels0: jax.Array,
+                  offset: jax.Array, backend: str, max_iters: int) -> FixpointResult:
+    """Un-jitted fixpoint body — callable from inside shard_map/jit contexts."""
+    relax = _BACKENDS[backend]
+    n = graph.n
+
+    def cond(state):
+        _, prev_prop, any_frontier, it, _, _ = state
+        return jnp.logical_and(any_frontier, it < max_iters)
+
+    def body(state):
+        labels, prev_prop, _, it, conv, edges = state
+        cur_prop = compute_prop(labels, srcs, n, offset)
+        # frontier = vertices whose propagation value changed since the last
+        # superstep (includes the initial source-adjacency frontier at it=0,
+        # because prev_prop starts all-INF).  Paper's edge-check workload
+        # metric = sum of frontier out-degrees (Figs 7/8).
+        frontier = cur_prop != prev_prop
+        row_active = jnp.any(frontier, axis=1)
+        edges = edges + jnp.sum(
+            jnp.where(frontier, graph.out_deg[None, :], 0), axis=1, dtype=jnp.int32)
+        conv = jnp.where(row_active, it + 1, conv)
+        cand = relax(cur_prop, graph)
+        new = jnp.minimum(labels, cand)
+        return new, cur_prop, jnp.any(row_active), it + 1, conv, edges
+
+    s = srcs.shape[0]
+    state0 = (labels0, jnp.full((s, n), INF, dtype=jnp.int32), jnp.bool_(True),
+              jnp.int32(0), jnp.zeros((s,), jnp.int32), jnp.zeros((s,), jnp.int32))
+    labels, _, _, iters, conv, edges = jax.lax.while_loop(cond, body, state0)
+    # the final superstep only *verifies* the fixpoint; don't count it as work
+    return FixpointResult(labels=labels, iters=jnp.maximum(iters - 1, 0),
+                          conv_iter=jnp.maximum(conv - 1, 0), edge_checks=edges)
+
+
+_fixpoint = functools.partial(jax.jit, static_argnames=("backend", "max_iters"),
+                              donate_argnames=("labels0",))(fixpoint_impl)
+
+
+def gsofa_batch(graph: SymbolicGraph, srcs: jax.Array, *, backend: str = "ell",
+                max_iters: Optional[int] = None, labels0: Optional[jax.Array] = None,
+                offset: jax.Array | int = 0) -> FixpointResult:
+    """Run the fine-grained parallel fixpoint for a batch of sources ("combined
+    traversal": one shared computation over the whole batch, DESIGN.md §2)."""
+    srcs = jnp.asarray(srcs, dtype=jnp.int32)
+    if max_iters is None:
+        max_iters = graph.n + 2
+    if labels0 is None:
+        labels0 = init_labels(graph, srcs, offset=offset)
+    return _fixpoint(graph, srcs, labels0, jnp.asarray(offset, jnp.int32),
+                     backend, int(max_iters))
+
+
+# ---------------------------------------------------------------------------
+# structure extraction
+# ---------------------------------------------------------------------------
+
+def fill_masks(labels: jax.Array, srcs: jax.Array,
+               offset: jax.Array | int = 0) -> jax.Array:
+    """(S, V) bool: filled structure of each row (originals + fill-ins, no diag)."""
+    n = labels.shape[1]
+    offset = jnp.asarray(offset, jnp.int32)
+    v_ids = jnp.arange(n, dtype=jnp.int32)
+    mask = labels < offset + v_ids[None, :]
+    return mask & (v_ids[None, :] != srcs[:, None])
+
+
+def row_counts(labels: jax.Array, srcs: jax.Array,
+               offset: jax.Array | int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Per-row L-part / U-part structural counts (columns < src / > src)."""
+    n = labels.shape[1]
+    v_ids = jnp.arange(n, dtype=jnp.int32)
+    mask = fill_masks(labels, srcs, offset)
+    l_cnt = jnp.sum(mask & (v_ids[None, :] < srcs[:, None]), axis=1)
+    u_cnt = jnp.sum(mask & (v_ids[None, :] > srcs[:, None]), axis=1)
+    return l_cnt, u_cnt
+
+
+def dense_pattern(graph: SymbolicGraph, *, backend: str = "ell", batch: int = 64
+                  ) -> np.ndarray:
+    """Full L+U boolean pattern (diag True) — convenience for tests/benchmarks."""
+    n = graph.n
+    out = np.zeros((n, n), dtype=bool)
+    for start in range(0, n, batch):
+        srcs = np.arange(start, min(start + batch, n), dtype=np.int32)
+        res = gsofa_batch(graph, srcs, backend=backend)
+        out[srcs] = np.asarray(fill_masks(res.labels, jnp.asarray(srcs)))
+    np.fill_diagonal(out, True)
+    return out

@@ -1,0 +1,120 @@
+"""Space-complexity management (paper §VI), adapted to TPU/JAX (DESIGN.md §2).
+
+Three prongs, mirroring the paper:
+
+1. **LabelArena / window trick** — the paper slides the "valid value range" of
+   maxId[] down the int32 range so the array is re-initialized only once every
+   ``maxVal/|V|`` sources (re-init cost on PR drops 22% -> 0.08%).  This is an
+   algebraic trick and transfers verbatim: labels are stored as
+   ``offset_k + maxId`` with ``offset_k = top - k*(n+2)``; anything above
+   ``offset_k + n`` reads as uninitialized, so the previous chunk's garbage is
+   inert and the buffer is reused (donated) without clearing.
+
+2. **Bubble removal** — a source v never touches label entries > v.  Exact
+   removal is ragged; we recover it at *chunk* granularity: sources are chunked
+   in ascending order and each chunk's label matrix is allocated at width
+   ``round_up(max_src_in_chunk + 1)`` instead of |V| (see multisource.plan_chunks).
+
+3. **Memory envelope / auto-#C** — one arena budget covers labels + prop +
+   gather scratch; if the configured budget cannot host the requested
+   concurrency, #C is reduced (the paper's final fallback, §VI "space
+   configurability").  ``bytes_per_source`` accounts for the real resident set
+   of the chosen backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gsofa import INF, SymbolicGraph
+
+_I32_TOP = np.int32(np.iinfo(np.int32).max - 4)
+
+
+@dataclasses.dataclass
+class LabelArena:
+    """Reusable (C, V) label buffer with sliding-window re-initialization."""
+
+    capacity: int            # max concurrent sources (#C)
+    n: int                   # label width (graph order, or chunk bubble width)
+    reinits: int = 0         # how many real re-initializations happened
+    windows: int = 0         # how many windows were consumed
+
+    def __post_init__(self):
+        self._range = self.n + 2
+        # leave headroom so offset + n never overflows int32
+        self._top = int(_I32_TOP) - self._range
+        self._floor = self._range + 1
+        self._offset = None   # set on first window
+        self.buf = jnp.full((self.capacity, self.n), INF, dtype=jnp.int32)
+        self.reinits = 1      # the initial fill is a real initialization
+
+    def next_window(self) -> int:
+        """Advance to a fresh value window; re-initialize only on wraparound."""
+        if self._offset is None:
+            self._offset = self._top
+        else:
+            self._offset -= self._range
+            if self._offset < self._floor:
+                # wraparound: one real re-init every ~2^31/|V| windows
+                self.buf = jnp.full((self.capacity, self.n), INF, dtype=jnp.int32)
+                self.reinits += 1
+                self._offset = self._top
+        self.windows += 1
+        return self._offset
+
+    @property
+    def offset(self) -> int:
+        assert self._offset is not None, "call next_window() first"
+        return self._offset
+
+
+def bytes_per_source(graph: SymbolicGraph, backend: str = "ell",
+                     label_width: Optional[int] = None) -> int:
+    """Resident bytes one concurrent source costs during the fixpoint.
+
+    Paper Table II counts 6 structures x |V| entries (two queues, two trackers,
+    maxId, fill).  In the dense adaptation the queues/trackers fold into the
+    batch dimension; the real per-source residents are: labels (V), prev_prop
+    (V), cur_prop (V), and the relaxation scratch — (V * K_in) for the ELL
+    gather or the (V) accumulator for the blocked kernel.
+    """
+    v = label_width if label_width is not None else graph.n
+    base = 3 * v * 4
+    if backend == "ell":
+        k = int(graph.in_ell.shape[1])
+        return base + v * k * 4
+    return base + v * 4
+
+
+def auto_concurrency(graph: SymbolicGraph, budget_bytes: Optional[int],
+                     requested: int, backend: str = "ell",
+                     label_width: Optional[int] = None) -> int:
+    """Paper §VI fallback: shrink #C until the resident set fits the envelope."""
+    if budget_bytes is None:
+        return requested
+    per_src = bytes_per_source(graph, backend, label_width)
+    fixed = graph.in_ell.size * 4 + graph.out_ell.size * 4 + graph.out_deg.size * 4
+    if graph.adj_dense is not None:
+        fixed += graph.adj_dense.size
+    avail = budget_bytes - fixed
+    if avail <= 0:
+        return 1
+    return max(1, min(requested, avail // per_src))
+
+
+def aux_memory_report(graph: SymbolicGraph, concurrency: int,
+                      backend: str = "ell") -> dict:
+    """Fig 16 analogue: auxiliary-structure bytes vs matrix bytes."""
+    matrix_bytes = graph.in_ell.size * 4 + graph.out_ell.size * 4
+    aux = bytes_per_source(graph, backend) * concurrency
+    return {
+        "matrix_bytes": int(matrix_bytes),
+        "aux_bytes": int(aux),
+        "ratio": float(aux) / max(1, matrix_bytes),
+        "concurrency": concurrency,
+    }

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (sharding-aware, checkpointable)."""
+from repro.data.pipeline import SyntheticTextPipeline, make_batch_for
+
+__all__ = ["SyntheticTextPipeline", "make_batch_for"]

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
+
+* ``gsofa_relax`` — bottleneck-semiring relaxation, the GSoFa hot spot.
+* ``flash_attention`` — blocked online-softmax attention for the LM substrate.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

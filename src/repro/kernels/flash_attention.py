@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+The LM side of the framework is dominated by attention at the 32k/500k shapes;
+this kernel is the VMEM-tiled implementation: the (Bq, D) query tile and the
+running (m, l, o) statistics stay resident while (Bk, D) key/value tiles stream
+through the innermost grid axis.  Softmax is computed online (never
+materializing the (S, T) score matrix), which converts attention from
+HBM-bandwidth-bound at long T to compute-bound — the standard FlashAttention
+rescaling, blocked for the MXU (logit matmul) + VPU (rescale) split.
+
+Layout notes for TPU: last dims are multiples of 128 (D padded by the ops.py
+wrapper), second-to-last multiples of 8.  GQA is handled by the wrapper
+repeating KV heads; a production variant would fold the group into the kv
+index_map instead (no materialized repeat) — noted in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  t_real: int, kv_offset: int, num_k: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (Bq, D)
+    k = k_ref[0].astype(jnp.float32)                     # (Bk, D)
+    v = v_ref[0].astype(jnp.float32)                     # (Bk, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (Bq, Bk)
+
+    q_ids = i * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    k_ids = j * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = k_ids < t_real                                # drop padded keys
+    if causal:
+        # decode/prefill against a longer cache: query s attends to cache
+        # positions <= s + kv_offset
+        mask = mask & (k_ids <= q_ids + kv_offset)
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_ref[0]                                    # (Bq,)
+    l_prev = l_ref[0]
+    m_cur = jnp.max(logits, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_ref[0] = o_ref[0] * alpha[:, None] + pv
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(j == num_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0] = o_ref[0] / denom[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, H, T, D) with T >= S. Returns (B, H, S, D).
+
+    When T > S the queries are assumed to be the *last* S positions of the
+    sequence (prefill continuation / decode), i.e. query s sees cache
+    positions <= s + (T - S).
+    """
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    kv_offset = t - s
+
+    def pad(x, axis, mult, value=0.0):
+        p = (-x.shape[axis]) % mult
+        if p == 0:
+            return x
+        w = [(0, 0)] * x.ndim
+        w[axis] = (0, p)
+        return jnp.pad(x, w, constant_values=value)
+
+    d_pad = max(128, ((d + 127) // 128) * 128)
+    block_q = min(block_q, max(8, ((s + 7) // 8) * 8))
+    qq = pad(pad(q.reshape(b * h, s, d), 1, block_q), 2, d_pad)
+    kk = pad(pad(k.reshape(b * h, t, d), 1, block_k), 2, d_pad)
+    vv = pad(pad(v.reshape(b * h, t, d), 1, block_k), 2, d_pad)
+    bh, s_pad, _ = qq.shape
+    t_pad = kk.shape[1]
+    num_k = t_pad // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, t_real=t, kv_offset=kv_offset, num_k=num_k)
+
+    o, _, _ = pl.pallas_call(
+        kernel,
+        grid=(bh, s_pad // block_q, num_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_pad), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, block_k, d_pad), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, block_k, d_pad), lambda b_, i, j: (b_, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d_pad), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b_, i, j: (b_, i)),
+            pl.BlockSpec((1, block_q), lambda b_, i, j: (b_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s_pad), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qq, kk, vv)
+
+    return o[:, :s, :d].reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper pads to block multiples, dispatches to the kernel (interpret mode
+everywhere except real TPU), and slices the result back.  ``ref.py`` holds the
+pure-jnp oracles the tests compare against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.gsofa_relax import minmax_relax_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def minmax_relax(prop: jax.Array, adj: jax.Array, *, block_s: int = 8,
+                 block_u: int = 128, block_v: int = 256,
+                 interpret: bool | None = None) -> jax.Array:
+    """Bottleneck-semiring relaxation; see gsofa_relax.py.  Pads + dispatches."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    s, u = prop.shape
+    _, v = adj.shape
+    inf = _ref._inf(prop.dtype)
+    block_u = min(block_u, max(8, ((u + 7) // 8) * 8))
+    block_v = min(block_v, max(128, ((v + 127) // 128) * 128))
+    prop_p = _pad_to(_pad_to(prop, 0, block_s, inf), 1, block_u, inf)
+    adj_p = _pad_to(_pad_to(adj, 0, block_u, 0), 1, block_v, 0)
+    out = minmax_relax_pallas(prop_p, adj_p, block_s=block_s, block_u=block_u,
+                              block_v=block_v, interpret=interpret)
+    return out[:s, :v]
+
+
+def minmax_relax_ref(prop: jax.Array, adj: jax.Array) -> jax.Array:
+    return _ref.minmax_relax_ref(prop, adj)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Blocked online-softmax attention; see flash_attention.py."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def mamba_scan(x, dt, b_t, c_t, a, d_skip, *, block_d: int = 512,
+               block_t: int = 128, interpret: bool | None = None):
+    """VMEM-resident selective scan; see ssm_scan.py.  Pads L/di to blocks."""
+    from repro.kernels.ssm_scan import mamba_scan_pallas
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, l, di = x.shape
+    block_d = min(block_d, di)
+    block_t = min(block_t, max(8, l))
+    pads = []
+    def padded(t, axis, mult):
+        return _pad_to(t, axis, mult, 0.0)
+    xp = padded(padded(x, 1, block_t), 2, block_d)
+    dtp = padded(padded(dt, 1, block_t), 2, block_d)
+    btp = padded(b_t, 1, block_t)
+    ctp = padded(c_t, 1, block_t)
+    ap = _pad_to(a, 0, block_d, -1.0)
+    dp = _pad_to(d_skip, 0, block_d, 0.0)
+    y = mamba_scan_pallas(xp, dtp, btp, ctp, ap, dp, block_d=block_d,
+                          block_t=block_t, interpret=interpret)
+    return y[:, :l, :di]
+
+
+def mamba_scan_ref(x, dt, b_t, c_t, a, d_skip):
+    return _ref.mamba_scan_ref(x, dt, b_t, c_t, a, d_skip)
+
+
+def rwkv6_scan(r, k, v, w, u, *, block_t: int = 128,
+               interpret: bool | None = None):
+    """VMEM-resident rwkv6 time-mix recurrence; see ssm_scan.py."""
+    from repro.kernels.ssm_scan import rwkv6_scan_pallas
+    if interpret is None:
+        interpret = not _on_tpu()
+    bh, l, kk = r.shape
+    block_t = min(block_t, max(8, l))
+    rp, kp, vp = (_pad_to(t, 1, block_t, 0.0) for t in (r, k, v))
+    wp = _pad_to(w, 1, block_t, 1.0)
+    o = rwkv6_scan_pallas(rp, kp, vp, wp, u, block_t=block_t,
+                          interpret=interpret)
+    return o[:, :l]
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    return _ref.rwkv6_scan_ref(r, k, v, w, u)

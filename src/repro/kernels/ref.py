@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref`` side of every kernel test)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _inf(dtype):
+    """Identity of the min-reduction. For ints this must be the *maximum*
+    representable value (not max//2): the GSoFa label arena (spaceopt.py)
+    stores stale values from earlier windows which must never be undercut by
+    the masked-out sentinel."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def minmax_relax_ref(prop: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """Bottleneck-semiring relaxation oracle.
+
+    cand[s, v] = min over u of (adj[u, v] != 0 ? prop[s, u] : INF)
+
+    ``prop`` (S, U) already carries the GSoFa clamp max(u, maxId[u]) and the
+    u < src mask (DESIGN.md §2); ``adj`` (U, V) is the dense 0/1 adjacency
+    (edge u -> v).
+    """
+    inf = _inf(prop.dtype)
+    masked = jnp.where(adj[None, :, :] != 0, prop[:, :, None], inf)
+    return jnp.min(masked, axis=1)
+
+
+def mamba_scan_ref(x, dt, b_t, c_t, a, d_skip):
+    """Sequential-scan oracle of kernels/ssm_scan.mamba_scan (pure jnp)."""
+    import jax
+
+    def step(h, inp):
+        x_t, dt_t, bb, cc = inp
+        h = h * jnp.exp(dt_t[..., None] * a[None]) \
+            + (dt_t * x_t)[..., None] * bb[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, cc) + d_skip[None] * x_t
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, b_t, c_t))
+    h0 = jnp.zeros((x.shape[0], x.shape[2], a.shape[1]), jnp.float32)
+    _, y = jax.lax.scan(step, h0, seq)
+    return jnp.moveaxis(y, 0, 1)
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """Sequential-scan oracle of kernels/ssm_scan.rwkv6_scan (pure jnp)."""
+    import jax
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                      # (BH, K)
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        o_t = jnp.einsum("bk,bkv->bv", r_t, s + u[:, :, None] * kv)
+        return s * w_t[:, :, None] + kv, o_t
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s0 = jnp.zeros((r.shape[0], r.shape[2], r.shape[2]), jnp.float32)
+    _, o = jax.lax.scan(step, s0, seq)
+    return jnp.moveaxis(o, 0, 1)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """O(S^2) attention oracle for the flash-attention kernel.
+
+    q: (B, H, S, D), k/v: (B, H, T, D). float32 math.
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf) * scale
+    if causal:
+        s, t = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, vf).astype(q.dtype)

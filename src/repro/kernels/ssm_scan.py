@@ -1,0 +1,146 @@
+"""Pallas TPU kernels: VMEM-resident linear-recurrence (SSM) scans.
+
+The rwkv6/mamba recurrences are elementwise updates of a per-sequence state
+that is tiny (K x V per head / di x N per channel-block) but re-read every
+token — on any backend that round-trips the state through HBM they are
+memory-latency bound.  The TPU-native form keeps the state in VMEM scratch
+across the whole time axis and streams the per-token inputs through
+double-buffered tiles: per token the state traffic is zero HBM bytes, so the
+layer reverts to being input-bandwidth bound (the roofline's memory term
+uses this kernel's traffic model).
+
+Two kernels:
+
+* ``mamba_scan``:  h_t = exp(dt_t A) * h_t-1 + (dt_t x_t) (x) B_t,
+                   y_t = h_t . C_t + D x_t
+  grid (B, di/Bd, L/Bt), t innermost; scratch h (Bd, N) persists across the
+  t-axis (sequential grid semantics), A/D tiles resident.
+
+* ``rwkv6_scan``:  S_t = diag(w_t) S_t-1 + k_t^T v_t,
+                   o_t = r_t (S_t-1 + diag(u) k_t^T v_t)
+  grid (B*H, L/Bt); scratch S (K, K).
+
+Tiling: K/N are 64/16 for the assigned archs — below the 128-lane VREG
+width, so on real TPU the last dim pads to 128 (interpret mode does not
+care; the ops.py wrapper passes tiles through unpadded and documents the
+padding cost).  Block defaults keep VMEM per step under ~1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref, *,
+                  block_t: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0]                   # (Bt, Bd)
+    dt = dt_ref[0]                 # (Bt, Bd)
+    bb = b_ref[0]                  # (Bt, N)
+    cc = c_ref[0]                  # (Bt, N)
+    a = a_ref[...]                 # (Bd, N)
+    dsk = d_ref[...]               # (1, Bd)
+
+    def step(s, carry):
+        h, ys = carry
+        dt_s = jax.lax.dynamic_slice_in_dim(dt, s, 1, 0)[0]        # (Bd,)
+        x_s = jax.lax.dynamic_slice_in_dim(x, s, 1, 0)[0]
+        bb_s = jax.lax.dynamic_slice_in_dim(bb, s, 1, 0)[0]        # (N,)
+        cc_s = jax.lax.dynamic_slice_in_dim(cc, s, 1, 0)[0]
+        decay = jnp.exp(dt_s[:, None] * a)                         # (Bd, N)
+        h = h * decay + (dt_s * x_s)[:, None] * bb_s[None, :]
+        y_s = jnp.sum(h * cc_s[None, :], axis=1) + dsk[0] * x_s    # (Bd,)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y_s[None], s, 0)
+        return h, ys
+
+    h0 = h_ref[...]
+    h, ys = jax.lax.fori_loop(0, block_t, step,
+                              (h0, jnp.zeros_like(x)))
+    h_ref[...] = h
+    y_ref[0] = ys
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_t", "interpret"))
+def mamba_scan_pallas(x, dt, b_t, c_t, a, d_skip, *, block_d: int = 512,
+                      block_t: int = 128, interpret: bool = True):
+    """x/dt: (B, L, di) f32; b_t/c_t: (B, L, N); a: (di, N); d_skip: (di,).
+    Returns y: (B, L, di).  Shapes must divide the blocks (ops.py pads)."""
+    bsz, l, di = x.shape
+    n = b_t.shape[-1]
+    assert di % block_d == 0 and l % block_t == 0, (x.shape, block_d, block_t)
+    grid = (bsz, di // block_d, l // block_t)
+    kernel = functools.partial(_mamba_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_t, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_t, n), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, block_t, n), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((block_d, n), lambda b, d, t: (d, 0)),
+            pl.BlockSpec((1, block_d), lambda b, d, t: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_d), lambda b, d, t: (b, t, d)),
+        out_shape=jax.ShapeDtypeStruct((bsz, l, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, b_t, c_t, a, d_skip[None])
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                 block_t: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0]                  # (Bt, K)
+    k = k_ref[0]
+    v = v_ref[0]
+    w = w_ref[0]
+    u = u_ref[...]                # (1, K)
+
+    def step(t, carry):
+        s, os = carry
+        r_t = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)[0]
+        k_t = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)[0]
+        v_t = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)[0]
+        w_t = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)[0]
+        kv = k_t[:, None] * v_t[None, :]                          # (K, K)
+        o_t = jnp.sum(r_t[:, None] * (s + u[0][:, None] * kv), axis=0)
+        s = s * w_t[:, None] + kv
+        os = jax.lax.dynamic_update_slice_in_dim(os, o_t[None], t, 0)
+        return s, os
+
+    s0 = s_ref[...]
+    s, os = jax.lax.fori_loop(0, block_t, step, (s0, jnp.zeros_like(r)))
+    s_ref[...] = s
+    o_ref[0] = os
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan_pallas(r, k, v, w, u, *, block_t: int = 128,
+                      interpret: bool = True):
+    """r/k/v/w: (BH, L, K) f32 (heads folded into batch); u: (BH, K).
+    Returns o: (BH, L, K)."""
+    bh, l, kk = r.shape
+    assert l % block_t == 0, (l, block_t)
+    grid = (bh, l // block_t)
+    kernel = functools.partial(_rwkv_kernel, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_t, kk), lambda b, t: (b, t, 0))] * 4
+        + [pl.BlockSpec((1, kk), lambda b, t: (b, 0))],
+        out_specs=pl.BlockSpec((1, block_t, kk), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, kk), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,399 @@
+"""Compositional cost extraction for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` visits a while-loop body ONCE, so a
+scanned model under-reports FLOPs by ~n_groups and hides the collectives
+inside the loop.  We therefore decompose each step's cost into components
+whose lowerings contain no while loops (all inner scans run ``unroll``-ed):
+
+    cost(train_step)  = n_groups x cost(group fwd+bwd, remat'd)
+                      + cost(stem+head: embed + final-norm + chunked-CE, fwd+bwd)
+                      + cost(encoder fwd+bwd)                    [enc-dec only]
+                      + cost(optimizer update, ZeRO-1)
+    cost(prefill)     = n_groups x cost(group fwd) + stem/head fwd [+ encoder]
+    cost(decode)      = n_groups x cost(group decode) + stem/head fwd
+
+Every component is lowered with the production shardings of the full step,
+so per-device FLOPs / HBM bytes / collective bytes are what the partitioned
+program actually does.  The full (scanned) step is still compiled separately
+by dryrun.py — that artifact provides the compile-coherence proof and the
+memory analysis; this module provides the exact cost totals.
+
+Known residual under-count (documented in EXPERIMENTS.md §Methodology): the
+sequential time-step recurrences of rwkv6/mamba remain while-loops even here
+(unrolling 4k-512k steps is infeasible); their body cost is measured once
+and multiplied analytically by the trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from collections import Counter
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.train import sharding as shd
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+from repro.train.steps import batch_specs, cache_specs, param_specs
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "collective-broadcast")
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\]{},:()\sTSE#]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(-start)?\(")
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by collectives, summed from the partitioned
+    HLO's result shapes (post-SPMD the module is the per-device program, so
+    these are local bytes; global bytes = local x n_devices)."""
+    per_op: Counter = Counter()
+    counts: Counter = Counter()
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group(2)
+        per_op[op] += _shape_bytes(m.group(1))
+        counts[op] += 1
+    return {"bytes_by_op": dict(per_op), "counts_by_op": dict(counts),
+            "total_bytes": int(sum(per_op.values()))}
+
+
+def analyze_compiled(compiled) -> Dict[str, Any]:
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "hbm_bytes": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+    }
+
+
+def sharded_bytes(structs, shardings) -> float:
+    """Exact per-device bytes of a sharded pytree (from shard shapes)."""
+    import math
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(structs), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        shard = sh.shard_shape(leaf.shape)
+        total += math.prod(shard) * jnp.dtype(leaf.dtype).itemsize
+    return float(total)
+
+
+def memory_record(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "peak_bytes_est": float(ma.argument_size_in_bytes
+                                + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                - ma.alias_size_in_bytes),
+    }
+
+
+# ---------------------------------------------------------------------------
+# component shardings
+# ---------------------------------------------------------------------------
+
+def _strip_group_axis(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), tree)
+
+
+def _group_shardings(group_struct, mesh: Mesh, cfg: ModelConfig):
+    def one(path, leaf):
+        ps = shd.param_pspec("groups/" + shd._path_str(path),
+                             (1,) + leaf.shape, mesh, cfg)
+        return NamedSharding(mesh, P(*tuple(ps)[1:]))
+    return jax.tree_util.tree_map_with_path(one, group_struct)
+
+
+def _group_cache_shardings(cache_struct, mesh: Mesh, cfg: ModelConfig):
+    def one(path, leaf):
+        ps = shd.cache_pspec(shd._path_str(path), (1,) + leaf.shape, mesh, cfg)
+        return NamedSharding(mesh, P(*tuple(ps)[1:]))
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def _act_sharding(shape: Tuple[int, ...], mesh: Mesh, cfg: ModelConfig):
+    return NamedSharding(mesh, shd.batch_pspec(shape, mesh, cfg))
+
+
+def _seq_total(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+
+def _stem_tree(p_specs) -> Dict:
+    stem = {"embed": p_specs["embed"], "final_norm": p_specs["final_norm"]}
+    if "head" in p_specs:
+        stem["head"] = p_specs["head"]
+    return stem
+
+
+def group_component(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                    dtype, q_chunk: Optional[int]) -> Tuple[Any, Tuple, Tuple]:
+    """Returns (fn, arg_structs, in_shardings) for one layer group."""
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else _seq_total(cfg, shape)
+    d = cfg.d_model
+    has_enc = cfg.encdec is not None
+
+    p_specs = param_specs(cfg, dtype)
+    gp_struct = _strip_group_axis(p_specs["groups"])
+    gp_sh = _group_shardings(gp_struct, mesh, cfg)
+    x_struct = jax.ShapeDtypeStruct((b, s, d), dtype)
+    x_sh = _act_sharding((b, s, d), mesh, cfg)
+    enc_struct = (jax.ShapeDtypeStruct((b, cfg.encdec.enc_len, d), dtype)
+                  if has_enc else None)
+    enc_sh = (_act_sharding((b, cfg.encdec.enc_len, d), mesh, cfg)
+              if has_enc else None)
+
+    if shape.kind == "train":
+        def fn(gp, x, dy, enc=None):
+            # jax.vjp with an explicit bf16 cotangent: this is what the real
+            # scanned train step feeds each group (a sum(f32(out)*dy) proxy
+            # would inject f32 cotangents and double every dx collective)
+            def fwd(gp, x, enc):
+                with shd.step_context(mesh, cfg):
+                    out, _, aux = tf.group_step(
+                        x, gp, None, cfg=cfg, mode="train", enc=enc,
+                        cache_len=s, q_chunk=q_chunk, unroll=True)
+                return out, aux
+            if cfg.remat:
+                fwd = jax.checkpoint(fwd)
+            (out, aux), vjp = jax.vjp(fwd, gp, x, enc)
+            grads = vjp((dy.astype(out.dtype),
+                         jnp.ones_like(aux) * 0.01))
+            return grads if enc is not None else grads[:2]
+
+        structs = [gp_struct, x_struct, x_struct] + ([enc_struct] if has_enc else [])
+        shards = [gp_sh, x_sh, x_sh] + ([enc_sh] if has_enc else [])
+        return fn, tuple(structs), tuple(shards)
+
+    if shape.kind == "prefill":
+        def fn(gp, x, enc=None):
+            with shd.step_context(mesh, cfg):
+                out, cache, _ = tf.group_step(
+                    x, gp, None, cfg=cfg, mode="prefill", enc=enc,
+                    cache_len=shape.seq_len, q_chunk=q_chunk, unroll=True)
+            return out, cache
+
+        structs = [gp_struct, x_struct] + ([enc_struct] if has_enc else [])
+        shards = [gp_sh, x_sh] + ([enc_sh] if has_enc else [])
+        return fn, tuple(structs), tuple(shards)
+
+    # decode
+    cache_struct = _strip_group_axis(cache_specs(cfg, b, shape.seq_len, dtype))
+    cache_sh = _group_cache_shardings(cache_struct, mesh, cfg)
+
+    def fn(gp, x, cache):
+        with shd.step_context(mesh, cfg):
+            out, new_cache, _ = tf.group_step(
+                x, gp, cache, cfg=cfg, mode="decode", enc=None,
+                cache_len=shape.seq_len, q_chunk=None, unroll=True)
+        return out, new_cache
+
+    return fn, (gp_struct, x_struct, cache_struct), (gp_sh, x_sh, cache_sh)
+
+
+def stem_head_component(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                        dtype) -> Tuple[Any, Tuple, Tuple]:
+    """embed + final norm + loss/logits (+ their backward for train)."""
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else _seq_total(cfg, shape)
+    s_text = s - cfg.n_patches if (cfg.n_patches and shape.kind != "decode") else s
+    d = cfg.d_model
+
+    p_specs = param_specs(cfg, dtype)
+    stem_struct = _stem_tree(p_specs)
+    stem_sh = shd.param_shardings(stem_struct, mesh, cfg)
+    tok_struct = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    tok_sh = _act_sharding((b, s_text), mesh, cfg)
+    x_struct = jax.ShapeDtypeStruct((b, s, d), dtype)
+    x_sh = _act_sharding((b, s, d), mesh, cfg)
+
+    if shape.kind == "train":
+        lbl_struct = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        lbl_sh = _act_sharding((b, s), mesh, cfg)
+
+        def fn(stem, x_mid, tokens, labels):
+            def fwd(stem, x_mid):
+                with shd.step_context(mesh, cfg):
+                    x = tf.L.embed(stem["embed"], tokens)
+                    if cfg.n_patches:
+                        x = jnp.pad(x, ((0, 0), (cfg.n_patches, 0), (0, 0)))
+                    hidden = tf.L.rmsnorm(stem["final_norm"], x + x_mid,
+                                          cfg.norm_eps)
+                    return tf.ce_loss(stem, cfg, hidden, labels, unroll=True)
+            return jax.grad(fwd, argnums=(0, 1))(stem, x_mid)
+
+        return (fn, (stem_struct, x_struct, tok_struct, lbl_struct),
+                (stem_sh, x_sh, tok_sh, lbl_sh))
+
+    def fn(stem, x_mid, tokens):
+        with shd.step_context(mesh, cfg):
+            x = tf.L.embed(stem["embed"], tokens)
+            if cfg.n_patches and shape.kind != "decode":
+                x = jnp.pad(x, ((0, 0), (cfg.n_patches, 0), (0, 0)))
+            hidden = tf.L.rmsnorm(stem["final_norm"], x + x_mid, cfg.norm_eps)
+            logits = tf.logits_last(stem, cfg, hidden)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return (fn, (stem_struct, x_struct, tok_struct), (stem_sh, x_sh, tok_sh))
+
+
+def encoder_component(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                      dtype) -> Optional[Tuple[Any, Tuple, Tuple]]:
+    if cfg.encdec is None or shape.kind == "decode":
+        return None
+    b = shape.global_batch
+    t, d = cfg.encdec.enc_len, cfg.d_model
+    p_specs = param_specs(cfg, dtype)
+    enc_struct = {"encoder": p_specs["encoder"]}
+    enc_sh = shd.param_shardings(enc_struct, mesh, cfg)
+    f_struct = jax.ShapeDtypeStruct((b, t, d), dtype)
+    f_sh = _act_sharding((b, t, d), mesh, cfg)
+
+    if shape.kind == "train":
+        def fn(ep, frames, dy):
+            def fwd(ep, frames):
+                with shd.step_context(mesh, cfg):
+                    out = tf.encode(ep, cfg, frames, scan=False)
+                return jnp.sum(out.astype(jnp.float32) * dy.astype(jnp.float32))
+            return jax.grad(fwd, argnums=(0, 1))(ep, frames)
+        return fn, (enc_struct, f_struct, f_struct), (enc_sh, f_sh, f_sh)
+
+    def fn(ep, frames):
+        with shd.step_context(mesh, cfg):
+            return tf.encode(ep, cfg, frames, scan=False)
+    return fn, (enc_struct, f_struct), (enc_sh, f_sh)
+
+
+def optimizer_component(cfg: ModelConfig, mesh: Mesh, dtype,
+                        acfg: AdamWConfig = AdamWConfig()
+                        ) -> Tuple[Any, Tuple, Tuple]:
+    p_specs = param_specs(cfg, dtype)
+    o_specs = jax.eval_shape(init_adamw, p_specs)
+    p_sh = shd.param_shardings(p_specs, mesh, cfg)
+    o_sh = {"master": shd.opt_shardings(p_sh, p_specs, mesh),
+            "m": shd.opt_shardings(p_sh, p_specs, mesh),
+            "v": shd.opt_shardings(p_sh, p_specs, mesh),
+            "count": NamedSharding(mesh, P())}
+
+    def fn(params, opt, grads):
+        new_p, new_o, _ = adamw_update(params, grads, opt, acfg)
+        return new_p, new_o
+
+    return fn, (p_specs, o_specs, p_specs), (p_sh, o_sh, p_sh)
+
+
+# ---------------------------------------------------------------------------
+# cell costs
+# ---------------------------------------------------------------------------
+
+def _lower_component(fn, structs, shards) -> Dict[str, Any]:
+    compiled = jax.jit(fn, in_shardings=shards).lower(*structs).compile()
+    return analyze_compiled(compiled)
+
+
+def _ssm_scan_correction(cfg: ModelConfig, shape: ShapeConfig,
+                         n_dev: int) -> Dict[str, float]:
+    """Analytic add-back for the sequential time recurrences (their while
+    bodies are counted once by cost_analysis; real trip count is seq_len).
+    Per token per layer (fp32): rwkv6 state update+readout ~ 4*B*H*K^2 flops,
+    2 state r/w of B*H*K^2 * 4B; mamba ~ 6*B*di*N flops, 2*B*di*N*4 bytes."""
+    if shape.kind == "decode":
+        return {"flops": 0.0, "hbm_bytes": 0.0}
+    steps = shape.seq_len - 1          # body counted once already
+    b_local = max(1, shape.global_batch // n_dev)  # batch-sharded recurrence
+    fl = by = 0.0
+    for mixer, _ in cfg.full_pattern:
+        if mixer == "rwkv6":
+            h = cfg.d_model // cfg.ssm.head_size
+            k = cfg.ssm.head_size
+            fl += cfg.n_groups * steps * 4.0 * b_local * h * k * k
+            by += cfg.n_groups * steps * 2.0 * b_local * h * k * k * 4
+        elif mixer == "mamba":
+            di = cfg.ssm.expand * cfg.d_model
+            n = cfg.ssm.d_state
+            fl += cfg.n_groups * steps * 6.0 * b_local * di * n
+            by += cfg.n_groups * steps * 2.0 * b_local * di * n * 4
+    return {"flops": fl, "hbm_bytes": by}
+
+
+def cell_costs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+               dtype=jnp.bfloat16, q_chunk: Optional[int] = None
+               ) -> Dict[str, Any]:
+    """Exact per-device cost totals for one (arch x shape x mesh) cell."""
+    if q_chunk is None:
+        q_chunk = 1024 if shape.seq_len > 1024 else None
+    n_dev = mesh.devices.size
+    # gradient accumulation: the group/stem/encoder components run micro_steps
+    # times on a (B / micro_steps) microbatch; the optimizer runs once
+    micro = 1
+    if shape.kind == "train":
+        micro = max(1, cfg.micro_steps)
+        while shape.global_batch % micro:
+            micro //= 2
+    eff_shape = dataclasses.replace(shape,
+                                    global_batch=shape.global_batch // micro)
+    components: List[Tuple[str, int, Tuple]] = [
+        ("group", cfg.n_groups * micro,
+         group_component(cfg, mesh, eff_shape, dtype, q_chunk)),
+        ("stem_head", micro, stem_head_component(cfg, mesh, eff_shape, dtype)),
+    ]
+    enc = encoder_component(cfg, mesh, eff_shape, dtype)
+    if enc is not None:
+        components.append(("encoder", micro, enc))
+    if shape.kind == "train":
+        components.append(("optimizer", 1, optimizer_component(cfg, mesh, dtype)))
+
+    total = {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0}
+    detail = {}
+    for name, mult, (fn, structs, shards) in components:
+        rec = _lower_component(fn, structs, shards)
+        detail[name] = {"multiplier": mult, **rec}
+        total["flops"] += mult * rec["flops"]
+        total["hbm_bytes"] += mult * rec["hbm_bytes"]
+        total["collective_bytes"] += mult * rec["collectives"]["total_bytes"]
+
+    corr = _ssm_scan_correction(cfg, shape, n_dev)
+    total["flops"] += corr["flops"]
+    total["hbm_bytes"] += corr["hbm_bytes"]
+    detail["ssm_scan_correction"] = corr
+    return {"totals_per_device": total, "components": detail,
+            "q_chunk": q_chunk, "n_devices": int(n_dev)}

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be set before any jax import (jax locks the device count on first
+# init).  Only this entry point forces 512 placeholder devices; tests and
+# benchmarks see the real device list.
+
+"""Multi-pod dry-run driver.
+
+One *cell* = (architecture x input shape x mesh).  For each cell we
+
+  1. build the jitted production step (train_step / prefill / serve_step)
+     with full shardings (train/steps.py),
+  2. ``.lower().compile()`` it against ShapeDtypeStructs — no allocation —
+     which proves the sharding config is coherent on the production mesh,
+  3. print/record ``memory_analysis()`` (does it fit) and
+     ``cost_analysis()`` + the collective schedule parsed from the
+     partitioned HLO (launch/costs.py),
+  4. on the single-pod mesh additionally run the *compositional cost
+     extraction* (exact per-device FLOPs/bytes/collective bytes; see
+     costs.py docstring) that feeds EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --gsofa --mesh multipod
+  python -m repro.launch.dryrun --sweep            # everything, subprocesses
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def _artifact_path(name: str) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    return os.path.join(ARTIFACT_DIR, name + ".json")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             with_costs: bool = True) -> dict:
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES, cell_is_supported, get_config
+    from repro.launch import costs as C
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.steps import make_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod" if multi_pod else "pod"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+    ok, why = cell_is_supported(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        print(f"[dryrun] SKIP {arch} x {shape_name} x {mesh_name}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec["n_devices"] = int(mesh.devices.size)
+    rec["params"] = cfg.param_count()
+    rec["active_params"] = cfg.active_param_count()
+
+    t0 = time.time()
+    step = make_step(cfg, mesh, shape, dtype=jnp.bfloat16)
+    with mesh:
+        lowered = step.fn.lower(*step.args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+    print(compiled.memory_analysis())     # proves it fits (per device)
+    print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+           if k in ("flops", "bytes accessed")})
+    rec["memory"] = C.memory_record(compiled)
+    rec["full_step"] = C.analyze_compiled(compiled)
+    # exact per-device resident-state sizes (for the analytic memory model)
+    state_bytes = {}
+    if shape.kind == "train":
+        labels = ("params", "opt", "batch")
+    elif shape.kind == "prefill":
+        labels = ("params", "batch")
+    else:
+        labels = ("params", "caches", "tokens")
+    for name, struct, sh in zip(labels, step.args, step.in_shardings):
+        state_bytes[name] = C.sharded_bytes(struct, sh)
+    rec["state_bytes_per_device"] = state_bytes
+
+    if with_costs and not multi_pod:
+        t2 = time.time()
+        rec["costs"] = C.cell_costs(cfg, mesh, shape, dtype=jnp.bfloat16)
+        rec["costs_s"] = round(time.time() - t2, 1)
+    print(f"[dryrun] OK {arch} x {shape_name} x {mesh_name} "
+          f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+          f"temp={rec['memory']['temp_bytes']/1e9:.2f}GB/dev")
+    return rec
+
+
+def run_gsofa_cell(multi_pod: bool, n: int = 1 << 20, k_in: int = 16,
+                   concurrency: int = 64) -> dict:
+    """The paper-side distributed cell: GSoFa sources sharded over every mesh
+    axis (the 1,000-GPU scaling claim, compile-level).
+
+    One lowering = one *wave* of #C sources per device (the paper's
+    concurrency knob; labels are O(#C x |V|) per device, so #C is what the
+    memory envelope controls).  The full factorization is
+    ceil(n / (n_dev x #C)) host-driven waves with interleaved source order.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import make_distributed_counts
+    from repro.core.gsofa import SymbolicGraph
+    from repro.launch import costs as C
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(mesh.devices.size)
+    rec = {"arch": "gsofa", "shape": f"n{n}", "kind": "symbolic",
+           "mesh": "multipod" if multi_pod else "pod", "n_devices": n_dev}
+    graph = SymbolicGraph(
+        n=n,
+        in_ell=jax.ShapeDtypeStruct((n, k_in), jnp.int32),
+        out_ell=jax.ShapeDtypeStruct((n, k_in), jnp.int32),
+        out_deg=jax.ShapeDtypeStruct((n,), jnp.int32),
+        adj_dense=None)
+    srcs = jax.ShapeDtypeStruct((n_dev, concurrency), jnp.int32)
+    rec["concurrency"] = concurrency
+    rec["waves"] = -(-n // (n_dev * concurrency))
+    # bound supersteps by a realistic diameter, not |V| (lowering only)
+    step = make_distributed_counts(mesh, n, backend="ell", max_iters=512)
+    t0 = time.time()
+    with mesh:
+        lowered = step.lower(srcs, graph)
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    print(compiled.memory_analysis())
+    rec["memory"] = C.memory_record(compiled)
+    rec["full_step"] = C.analyze_compiled(compiled)
+    print(f"[dryrun] OK gsofa x {rec['mesh']} compile={rec['compile_s']}s")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# sweep driver (subprocess per cell: isolation + bounded memory)
+# ---------------------------------------------------------------------------
+
+def all_cells():
+    from repro.configs.archs import ALL_ARCHS
+    from repro.configs.base import SHAPES
+    # cheap archs first so results stream into the roofline analysis early
+    order = ["smollm-135m", "whisper-tiny", "qwen3-1.7b", "rwkv6-7b",
+             "gemma3-4b", "qwen3-14b", "moonshot-v1-16b-a3b", "internvl2-26b",
+             "jamba-1.5-large-398b", "deepseek-v3-671b"]
+    assert sorted(order) == sorted(ALL_ARCHS)
+    cells = []
+    for mesh_name in ("pod", "multipod"):
+        for arch in order:
+            for shape in SHAPES:
+                cells.append((arch, shape, mesh_name))
+    return cells
+
+
+def sweep(timeout: int, only_missing: bool) -> None:
+    cells = all_cells() + [("gsofa", "default", "pod"),
+                           ("gsofa", "default", "multipod")]
+    for arch, shape, mesh_name in cells:
+        name = f"{arch}__{shape}__{mesh_name}"
+        path = _artifact_path(name)
+        if only_missing and os.path.exists(path):
+            continue
+        args = [sys.executable, "-m", "repro.launch.dryrun",
+                "--mesh", mesh_name, "--out", path]
+        if arch == "gsofa":
+            args += ["--gsofa"]
+        else:
+            args += ["--arch", arch, "--shape", shape]
+        print(f"[sweep] {name}", flush=True)
+        try:
+            r = subprocess.run(args, timeout=timeout, capture_output=True,
+                               text=True)
+            if r.returncode != 0:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                               "error": r.stderr[-4000:]}, f, indent=1)
+                print(f"[sweep] FAIL {name}:\n{r.stderr[-2000:]}", flush=True)
+        except subprocess.TimeoutExpired:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": f"timeout after {timeout}s"}, f, indent=1)
+            print(f"[sweep] TIMEOUT {name}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("pod", "multipod"), default="pod")
+    ap.add_argument("--gsofa", action="store_true")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--no-costs", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--out")
+    args = ap.parse_args()
+
+    if args.sweep:
+        sweep(args.timeout, args.only_missing)
+        return
+
+    multi = args.mesh == "multipod"
+    name = (f"gsofa__default__{args.mesh}" if args.gsofa
+            else f"{args.arch}__{args.shape}__{args.mesh}")
+    try:
+        if args.gsofa:
+            rec = run_gsofa_cell(multi)
+        else:
+            rec = run_cell(args.arch, args.shape, multi,
+                           with_costs=not args.no_costs)
+    except Exception:
+        rec = {"arch": args.arch or "gsofa", "shape": args.shape,
+               "mesh": args.mesh, "error": traceback.format_exc()[-4000:]}
+        print(traceback.format_exc(), file=sys.stderr)
+        with open(args.out or _artifact_path(name), "w") as f:
+            json.dump(rec, f, indent=1)
+        sys.exit(1)
+
+    out = args.out or _artifact_path(name)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state; the dry-run sets the 512-placeholder-device XLA flag
+before its first jax import, everything else sees the real devices.
+
+Mesh shapes (TPU v5e target):
+  * single-pod: (data=16, model=16)           — 256 chips
+  * multi-pod:  (pod=2, data=16, model=16)    — 512 chips
+
+Axis semantics across the framework:
+  * ``pod``   — slow inter-pod links; batch (and FSDP for the 398B/671B
+                archs) shard here; gradient compression targets this axis.
+  * ``data``  — batch / ZeRO-1 optimizer sharding / sequence-sharded caches.
+  * ``model`` — tensor parallelism + expert parallelism.
+GSoFa shards *sources* over every axis flattened (paper's interleave, §V).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,438 @@
+"""Attention mixers: GQA (global / sliding-window / cross) and DeepSeek MLA,
+with KV caches for decode.
+
+Cache contract (decode): every mixer owns a dict of fixed-shape arrays plus an
+``idx`` scalar; ``*_decode`` writes the new token at ``idx`` and attends over
+the valid prefix.  Sliding-window layers keep a ring buffer of ``window``
+entries with explicit positions (so long_500k only caches 1k per local layer).
+MLA caches the *compressed* latent (kv_lora + rope dims), which is the whole
+point of MLA at 32k+ contexts.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, apply_rope, init_rmsnorm, rmsnorm
+from repro.train.sharding import constrain
+
+NEG = -1e30
+
+# decode-time cache layout: batch first, then give the sequence dim whatever
+# axes remain (matches train/sharding.cache_pspec) — attention then computes
+# T-locally (partial softmax + tiny all-reduces) instead of resharding the
+# cache to a head-sharded layout every token
+_CACHE_KV_PREFS = ("batch", None, [("data", "model"), ("data",), ("model",)],
+                   None)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    wq = _normal(k1, (d, cfg.n_heads * hd), s, dtype)
+    wo = _normal(k4, (cfg.n_heads * hd, d), (cfg.n_heads * hd) ** -0.5, dtype)
+    if cfg.hp != cfg.n_heads:
+        # TP-friendly head padding: zero column/row blocks for the padded
+        # heads — their output contribution is exactly zero, but every
+        # (B, H, S, hd) tensor becomes divisible by the model axis
+        pad = (cfg.hp - cfg.n_heads) * hd
+        wq = jnp.pad(wq, ((0, 0), (0, pad)))
+        wo = jnp.pad(wo, ((0, pad), (0, 0)))
+    p = {
+        "wq": wq,
+        "wk": _normal(k2, (d, cfg.n_kv_heads * hd), s, dtype),
+        "wv": _normal(k3, (d, cfg.n_kv_heads * hd), s, dtype),
+        "wo": wo,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _pad_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pad repeated K/V (B, n_heads, S, hd) up to (B, hp, S, hd) with zeros."""
+    if cfg.hp == cfg.n_heads:
+        return x
+    return jnp.pad(x, ((0, 0), (0, cfg.hp - cfg.n_heads), (0, 0), (0, 0)))
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)   # (B, H, S, hd)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _repeat_kv(x, n_rep):
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=1)
+
+
+def _sdpa(q, k, v, mask, scale) -> jax.Array:
+    """(B,H,S,hd) x (B,H,T,hd) -> (B,H,S,hd); float32 softmax."""
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def _causal_mask(s: int, t: int, window: Optional[int] = None) -> jax.Array:
+    q_ids = jnp.arange(s)[:, None] + (t - s)
+    k_ids = jnp.arange(t)[None, :]
+    mask = k_ids <= q_ids
+    if window is not None:
+        mask &= k_ids > q_ids - window
+    return mask[None, None]
+
+
+def _sdpa_chunked(q, k, v, scale, *, window: Optional[int] = None,
+                  q_chunk: Optional[int] = None, unroll: bool = False,
+                  causal: bool = True, seq_shard: bool = False) -> jax.Array:
+    """Query-chunked SDPA: bounds the logits working set to (B, H, Cq, T).
+
+    This is the jnp analogue of the flash kernel's outer loop (the kernel in
+    kernels/flash_attention.py additionally streams K/V tiles through VMEM);
+    at 32k+ sequer lengths the full (S, T) score matrix cannot be
+    materialized.  ``unroll`` is used by the dry-run cost extraction so every
+    chunk's FLOPs are visible to cost_analysis (scan bodies count once).
+    """
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    if q_chunk is None or s <= q_chunk or s % q_chunk:
+        # no chunking (or non-divisible length, e.g. whisper's 1500-frame
+        # encoder): one-shot SDPA
+        mask = _causal_mask(s, t, window) if causal else jnp.ones((1, 1, s, t), bool)
+        return _sdpa(q, k, v, mask, scale)
+    k_ids = jnp.arange(t)[None, :]
+
+    def body(_, i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=2)
+        if seq_shard:
+            # shard the query-chunk rows over 'model': the score/value
+            # matmuls then split 16-way even when n_heads % tp != 0
+            # (K/V stay as-is; only this chunk's rows partition)
+            qs = constrain(qs, ("batch", None, ("model",), None))
+        q_ids = i * q_chunk + jnp.arange(q_chunk)[:, None] + (t - s)
+        mask = (k_ids <= q_ids) if causal else jnp.ones((q_chunk, t), bool)
+        if causal and window is not None:
+            mask &= k_ids > q_ids - window
+        return None, _sdpa(qs, k, v, mask[None, None], scale)
+
+    # checkpoint per chunk: without it, scan's backward stacks every chunk's
+    # (B, H, Cq, T) probs — the full S x T score matrix we chunked to avoid.
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           jnp.arange(s // q_chunk, dtype=jnp.int32),
+                           unroll=unroll)
+    return jnp.moveaxis(outs, 0, 2).reshape(b, h, s, hd)
+
+
+def gqa_forward(params: Dict, x: jax.Array, cfg: ModelConfig, *,
+                window: Optional[int] = None,
+                positions: Optional[jax.Array] = None,
+                q_chunk: Optional[int] = None, unroll: bool = False,
+                causal: bool = True, return_kv: bool = False):
+    """Full-sequence (train / prefill) GQA with optional sliding window.
+
+    ``return_kv`` additionally returns the (pre-repeat) rotated K and V for
+    prefill cache construction.
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q = _split_heads(x @ params["wq"], cfg.hp, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "model", None, None))
+    kr = _pad_heads(_repeat_kv(k, cfg.n_heads // cfg.n_kv_heads), cfg)
+    vr = _pad_heads(_repeat_kv(v, cfg.n_heads // cfg.n_kv_heads), cfg)
+    kr = constrain(kr, ("batch", "model", None, None))
+    vr = constrain(vr, ("batch", "model", None, None))
+    out = _sdpa_chunked(q, kr, vr, hd ** -0.5, window=window,
+                        q_chunk=q_chunk, unroll=unroll, causal=causal,
+                        seq_shard=cfg.seq_shard_attention)
+    y = _merge_heads(out) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                   window: Optional[int] = None, dtype=jnp.float32) -> Dict:
+    t = min(max_len, window) if window else max_len
+    shape = (batch, cfg.n_kv_heads, t, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((batch, t), -1, jnp.int32),   # absolute position per slot
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_decode(params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig, *,
+               window: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B, 1, d).  Ring-buffered when ``window`` is set."""
+    b = x.shape[0]
+    hd = cfg.hd
+    idx = cache["idx"]                                # tokens generated so far
+    pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    q = _split_heads(x @ params["wq"], cfg.hp, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    t = cache["k"].shape[2]
+    slot = idx % t if window else idx                 # ring buffer for local layers
+    if t >= 65536:
+        # long caches are sequence-sharded (train/sharding.py); a
+        # dynamic-update-slice on the sharded dim makes GSPMD all-gather the
+        # whole cache per token — the one-hot masked update is elementwise
+        # and sharding-preserving (EXPERIMENTS.md §Perf, hillclimb #6)
+        hit = jnp.arange(t, dtype=jnp.int32) == slot                # (t,)
+        k_all = jnp.where(hit[None, None, :, None], k[:, :, 0][:, :, None],
+                          cache["k"])
+        v_all = jnp.where(hit[None, None, :, None], v[:, :, 0][:, :, None],
+                          cache["v"])
+        pos_all = jnp.where(hit[None, :], pos[:, 0][:, None], cache["pos"])
+    else:
+        k_all = cache["k"].at[:, :, slot].set(k[:, :, 0])
+        v_all = cache["v"].at[:, :, slot].set(v[:, :, 0])
+        pos_all = cache["pos"].at[:, slot].set(pos[:, 0])
+
+    k_all = constrain(k_all, _CACHE_KV_PREFS)
+    v_all = constrain(v_all, _CACHE_KV_PREFS)
+    kr = _pad_heads(_repeat_kv(k_all, cfg.n_heads // cfg.n_kv_heads), cfg)
+    vr = _pad_heads(_repeat_kv(v_all, cfg.n_heads // cfg.n_kv_heads), cfg)
+    kr = constrain(kr, _CACHE_KV_PREFS)
+    vr = constrain(vr, _CACHE_KV_PREFS)
+    valid = (pos_all >= 0) & (pos_all <= idx)
+    if window:
+        valid &= pos_all > idx - window
+    mask = valid[:, None, None, :]                    # (B,1,1,T)
+    out = _sdpa(q, kr, vr, mask, hd ** -0.5)
+    new_cache = {"k": k_all, "v": v_all, "pos": pos_all, "idx": idx + 1}
+    return _merge_heads(out) @ params["wo"], new_cache
+
+
+def fill_gqa_cache(cache: Dict, k: jax.Array, v: jax.Array,
+                   window: Optional[int] = None) -> Dict:
+    """Write a prefill segment (rotated K/V, (B, Hkv, S, hd)) into a fresh
+    cache.  Sliding-window caches keep the last ``t`` positions in ring
+    layout (slot = pos % t), matching gqa_decode's write pattern."""
+    b, hkv, s, hd = k.shape
+    t = cache["k"].shape[2]
+    if s >= t:
+        pos = jnp.arange(s - t, s, dtype=jnp.int32)
+        k, v = k[:, :, -t:], v[:, :, -t:]
+    else:
+        pos = jnp.arange(s, dtype=jnp.int32)
+    slots = pos % t if window else pos
+    k_all = cache["k"].at[:, :, slots].set(k)
+    v_all = cache["v"].at[:, :, slots].set(v)
+    pos_all = cache["pos"].at[:, slots].set(jnp.broadcast_to(pos, (b, pos.shape[0])))
+    return {"k": k_all, "v": v_all, "pos": pos_all, "idx": jnp.int32(s)}
+
+
+def fill_mla_cache(cache: Dict, c_kv: jax.Array, k_rope: jax.Array) -> Dict:
+    """c_kv: (B, S, r); k_rope: (B, 1, S, rd)."""
+    s = c_kv.shape[1]
+    return {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_kv, 0, axis=1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope, 0, axis=2),
+        "idx": jnp.int32(s),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    return init_gqa(key, cfg, dtype)
+
+
+def make_cross_cache(params: Dict, enc: jax.Array, cfg: ModelConfig) -> Dict:
+    """Precompute encoder K/V once per request (reused every decode step)."""
+    k = _split_heads(enc @ params["wk"], cfg.n_kv_heads, cfg.hd)
+    v = _split_heads(enc @ params["wv"], cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+def cross_decode(params: Dict, x: jax.Array, cross_cache: Dict,
+                 cfg: ModelConfig) -> jax.Array:
+    """x: (B, 1, d) decoder state; attends over the cached encoder K/V."""
+    hd = cfg.hd
+    q = _split_heads(x @ params["wq"], cfg.hp, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    k = _pad_heads(_repeat_kv(cross_cache["k"], cfg.n_heads // cfg.n_kv_heads), cfg)
+    v = _pad_heads(_repeat_kv(cross_cache["v"], cfg.n_heads // cfg.n_kv_heads), cfg)
+    mask = jnp.ones((1, 1, 1, k.shape[2]), bool)
+    out = _sdpa(q, k, v, mask, hd ** -0.5)
+    return _merge_heads(out) @ params["wo"]
+
+
+def cross_forward(params: Dict, x: jax.Array, enc: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) decoder states; enc: (B, T, d) encoder output (no mask)."""
+    hd = cfg.hd
+    q = _split_heads(x @ params["wq"], cfg.hp, hd)
+    k = _split_heads(enc @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(enc @ params["wv"], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    k = _pad_heads(_repeat_kv(k, cfg.n_heads // cfg.n_kv_heads), cfg)
+    v = _pad_heads(_repeat_kv(v, cfg.n_heads // cfg.n_kv_heads), cfg)
+    mask = jnp.ones((1, 1, x.shape[1], enc.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, hd ** -0.5)
+    return _merge_heads(out) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(key, 6)
+    s = d ** -0.5
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": _normal(keys[0], (d, m.q_lora_rank), s, dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dtype),
+        "wq_b": _normal(keys[1], (m.q_lora_rank, h * qd), m.q_lora_rank ** -0.5, dtype),
+        "wkv_a": _normal(keys[2], (d, m.kv_lora_rank + m.rope_head_dim), s, dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+        "wkv_b": _normal(keys[3], (m.kv_lora_rank, h * (m.nope_head_dim + m.v_head_dim)),
+                         m.kv_lora_rank ** -0.5, dtype),
+        "wo": _normal(keys[4], (h * m.v_head_dim, d), (h * m.v_head_dim) ** -0.5, dtype),
+    }
+
+
+def _mla_qkv(params, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"], cfg.norm_eps) @ params["wq_b"]
+    q = q.reshape(b, s, h, m.nope_head_dim + m.rope_head_dim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # (B,1,S,rd)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(params, q_nope, q_rope, c_kv, k_rope, cfg, mask):
+    m = cfg.mla
+    h = cfg.n_heads
+    b, t = c_kv.shape[0], c_kv.shape[1]
+    kvb = params["wkv_b"].reshape(m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
+    k_nope_w = kvb[:, :, : m.nope_head_dim]            # (r, h, nope)
+    v_w = kvb[:, :, m.nope_head_dim:]                  # (r, h, vdim)
+    # absorb k projection into q (the MLA trick: attend in latent space)
+    q_lat = jnp.einsum("bhsn,rhn->bhsr", q_nope, k_nope_w)
+    logits = jnp.einsum("bhsr,btr->bhst", q_lat, c_kv,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bhsd,bhtd->bhst", q_rope,
+                         jnp.broadcast_to(k_rope, (b, 1, t, m.rope_head_dim)),
+                         preferred_element_type=jnp.float32)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    logits = jnp.where(mask, logits * scale, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+    out_lat = jnp.einsum("bhst,btr->bhsr", probs, c_kv)
+    out = jnp.einsum("bhsr,rhv->bhsv", out_lat, v_w)
+    return _merge_heads(out) @ params["wo"]
+
+
+def mla_forward(params: Dict, x: jax.Array, cfg: ModelConfig, *,
+                positions: Optional[jax.Array] = None,
+                q_chunk: Optional[int] = None, unroll: bool = False,
+                return_latent: bool = False):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+    if q_chunk is None or s <= q_chunk:
+        out = _mla_attend(params, q_nope, q_rope, c_kv, k_rope, cfg,
+                          _causal_mask(s, s))
+    else:
+        assert s % q_chunk == 0, (s, q_chunk)
+        k_ids = jnp.arange(s)[None, :]
+
+        def body(_, i):
+            qn = jax.lax.dynamic_slice_in_dim(q_nope, i * q_chunk, q_chunk, axis=2)
+            qr = jax.lax.dynamic_slice_in_dim(q_rope, i * q_chunk, q_chunk, axis=2)
+            q_ids = i * q_chunk + jnp.arange(q_chunk)[:, None]
+            mask = (k_ids <= q_ids)[None, None]
+            return None, _mla_attend(params, qn, qr, c_kv, k_rope, cfg, mask)
+
+        _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                               jnp.arange(s // q_chunk, dtype=jnp.int32),
+                               unroll=unroll)
+        # outs: (nc, B, S_c, d) -> (B, S, d)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, -1)
+    if return_latent:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> Dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, 1, max_len, m.rope_head_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    idx = cache["idx"]
+    pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, pos)
+    t = cache["ckv"].shape[1]
+    if t >= 65536:
+        hit = jnp.arange(t, dtype=jnp.int32) == idx
+        ckv_all = jnp.where(hit[None, :, None], c_kv, cache["ckv"])
+        krope_all = jnp.where(hit[None, None, :, None], k_rope, cache["krope"])
+    else:
+        ckv_all = cache["ckv"].at[:, idx].set(c_kv[:, 0])
+        krope_all = cache["krope"].at[:, :, idx].set(k_rope[:, :, 0])
+    ckv_all = constrain(ckv_all,
+                        ("batch", [("data", "model"), ("data",), ("model",)],
+                         None))
+    mask = (jnp.arange(t) <= idx)[None, None, None, :]
+    out = _mla_attend(params, q_nope, q_rope, ckv_all, krope_all, cfg, mask)
+    return out, {"ckv": ckv_all, "krope": krope_all, "idx": idx + 1}

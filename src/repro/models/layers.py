@@ -1,0 +1,87 @@
+"""Primitive layers: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Pure-functional: params are nested dicts, init_* build them, apply functions
+are free of global state.  Compute runs in the activation dtype; norms
+accumulate in float32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D) with even D; positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, d_ff ** -0.5
+    return {
+        "w_gate": _normal(k1, (d, d_ff), s_in, dtype),
+        "w_up": _normal(k2, (d, d_ff), s_in, dtype),
+        "w_down": _normal(k3, (d_ff, d), s_out, dtype),
+    }
+
+
+def mlp(params: Dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Dict:
+    return {"table": _normal(key, (vocab, d), d ** -0.5, dtype)}
+
+
+def embed(params: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Dict, x: jax.Array) -> jax.Array:
+    """Logits in float32 (loss stability)."""
+    return x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T

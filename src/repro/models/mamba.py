@@ -1,0 +1,125 @@
+"""Mamba (S6) selective state-space mixer, as used by Jamba's SSM layers.
+
+    h_t = exp(dt_t A) .  h_t-1 + (dt_t x_t) outer B_t
+    y_t = h_t . C_t + D x_t
+
+with A (di, N) diagonal-negative, dt/B/C data-dependent.  As in rwkv6.py, all
+projections and the depthwise conv run as full-sequence batched ops (MXU
+work); only the elementwise recurrence runs under ``lax.scan`` (the Pallas
+kernel in kernels/ssm_scan.py is the TPU-resident version; the scan here is
+its oracle).  The depthwise causal conv (d_conv taps) is computed as a sum of
+shifted scaled copies — exact and layout-friendly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal
+
+_DT_RANK_DIV = 16   # dt_rank = d_model / 16 (mamba default ~ d/16)
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm.expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // _DT_RANK_DIV)
+    return di, dt_rank, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    di, dt_rank, n, d_conv = _dims(cfg)
+    keys = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_in": _normal(keys[0], (d, 2 * di), s, dtype),            # x, z
+        "conv_w": _normal(keys[1], (d_conv, di), 0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_xproj": _normal(keys[2], (di, dt_rank + 2 * n), di ** -0.5, dtype),
+        "w_dt": _normal(keys[3], (dt_rank, di), dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),              # softplus ~ 0.01
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, n)).copy()),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": _normal(keys[4], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _conv_causal(x: jax.Array, conv_state: jax.Array, w: jax.Array,
+                 b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time as shifted adds.
+
+    x: (B, L, di); conv_state: (B, d_conv-1, di) = trailing inputs of the
+    previous segment.  Returns (y, new_conv_state).
+    """
+    d_conv = w.shape[0]
+    ext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B, L+dc-1, di)
+    l = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(d_conv):
+        # tap i multiplies input at offset (t - (d_conv-1-i))
+        y = y + ext[:, i:i + l, :] * w[i][None, None, :]
+    new_state = ext[:, -(d_conv - 1):, :] if d_conv > 1 else conv_state
+    return y + b[None, None, :], new_state
+
+
+def _selective_scan(xc, dt, b_t, c_t, a, d_skip, h0):
+    """The S6 recurrence under lax.scan.
+
+    xc/dt: (B, L, di); b_t/c_t: (B, L, N); a: (di, N); h0: (B, di, N).
+    Returns y (B, L, di), h_final.
+    """
+    def step(h, inp):
+        x_t, dt_t, bb, cc = inp                  # (B, di), (B, di), (B, N), (B, N)
+        decay = jnp.exp(dt_t[..., None] * a[None])           # (B, di, N)
+        h = h * decay + (dt_t * x_t)[..., None] * bb[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, cc) + d_skip[None] * x_t
+        return h, y_t
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dt, b_t, c_t))
+    h, y = jax.lax.scan(step, h0, seq)
+    return jnp.moveaxis(y, 0, 1), h
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    di, _, n, d_conv = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, di), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
+                  state: Dict | None = None) -> Tuple[jax.Array, Dict]:
+    """x: (B, L, d) -> (B, L, d). Works for train (L=seq), prefill, decode (L=1)."""
+    b, l, d = x.shape
+    di, dt_rank, n, _ = _dims(cfg)
+    if state is None:
+        state = init_mamba_state(cfg, b, x.dtype)
+
+    xz = x @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                            # (B, L, di) each
+    xc, conv_new = _conv_causal(xi, state["conv"], params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ params["w_xproj"]                                # (B, L, r+2N)
+    dt_raw, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_raw @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                                # (di, N), negative
+
+    y, h_new = _selective_scan(
+        xc.astype(jnp.float32), dt, b_t.astype(jnp.float32),
+        c_t.astype(jnp.float32), a, params["d_skip"], state["h"])
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    new_state = {"h": h_new, "conv": conv_new, "idx": state["idx"] + l}
+    return y, new_state
+
+
+def mamba_decode(params: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    return mamba_forward(params, x, cfg, state)

@@ -1,0 +1,128 @@
+"""RWKV6 ("Finch") time-mix: linear attention with data-dependent decay.
+
+Per head h with head size K: state S in R^{K x K} evolves per token
+
+    S_t = diag(w_t) S_t-1 + k_t^T v_t          (w_t in (0,1)^K, data-dependent)
+    o_t = r_t (diag(u) k_t^T v_t + S_t-1)      (u = per-head "bonus" on the
+                                                current token)
+
+All projections (r, k, v, g, the decay LoRA and the output) are computed for
+the whole sequence as batched matmuls — the dominant FLOPs stay on the MXU —
+and only the elementwise state recurrence runs under ``lax.scan``.  On real
+TPU the recurrence is the memory-latency hot spot; ``kernels/ssm_scan.py``
+holds the VMEM-resident Pallas kernel for it (the model uses the jnp scan,
+which is also the kernel's oracle).
+
+Deviations noted in DESIGN.md §7: the channel-mix FFN is the framework's
+SwiGLU (same FLOP structure), and the per-head GroupNorm on the output is an
+RMSNorm per head.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _normal, init_rmsnorm, rmsnorm
+
+_DECAY_LORA = 64
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    hs = cfg.ssm.head_size
+    n_heads = d // hs
+    keys = jax.random.split(key, 9)
+    s = d ** -0.5
+    return {
+        "wr": _normal(keys[0], (d, d), s, dtype),
+        "wk": _normal(keys[1], (d, d), s, dtype),
+        "wv": _normal(keys[2], (d, d), s, dtype),
+        "wg": _normal(keys[3], (d, d), s, dtype),
+        "wo": _normal(keys[4], (d, d), s, dtype),
+        # data-dependent decay: w_t = exp(-exp(base + lora(x_t)))
+        "w_base": jnp.zeros((d,), jnp.float32) - 0.6,
+        "w_lora_a": _normal(keys[5], (d, _DECAY_LORA), s, dtype),
+        "w_lora_b": _normal(keys[6], (_DECAY_LORA, d), _DECAY_LORA ** -0.5, dtype),
+        "u": _normal(keys[7], (n_heads, hs), 0.5, jnp.float32),
+        # token-shift mixing coefficients for (r, k, v, g, w)
+        "mix": _normal(keys[8], (5, d), 0.1, jnp.float32),
+        "o_norm": init_rmsnorm(hs, dtype),
+    }
+
+
+def _projections(params: Dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """Token-shifted projections for the whole sequence (batched matmuls).
+
+    x: (B, L, d); x_prev: (B, d) = last hidden of the previous segment
+    (zeros at sequence start).  Returns per-head r, k, v, g (B, L, H, K) and
+    decay w (B, L, H, K) in (0, 1).
+    """
+    b, l, d = x.shape
+    hs = cfg.ssm.head_size
+    h = d // hs
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mix = params["mix"].astype(x.dtype)                          # (5, d)
+    xs = x[None] * (1 - mix[:, None, None, :]) + shifted[None] * mix[:, None, None, :]
+    xr, xk, xv, xg, xw = xs                                      # each (B, L, d)
+    r = (xr @ params["wr"]).reshape(b, l, h, hs)
+    k = (xk @ params["wk"]).reshape(b, l, h, hs)
+    v = (xv @ params["wv"]).reshape(b, l, h, hs)
+    g = (xg @ params["wg"]).reshape(b, l, h, hs)
+    w_log = params["w_base"].astype(jnp.float32) + (
+        (xw @ params["w_lora_a"]) @ params["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, l, h, hs)            # (0, 1)
+    return r, k, v, g, w
+
+
+def _recurrence(r, k, v, w, u, state):
+    """lax.scan over time of the elementwise state update.
+
+    r/k/v/w: (B, L, H, K); u: (H, K); state: (B, H, K, K) keyed [key, value].
+    Returns o: (B, L, H, K) and the final state.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                                 # (B, H, K)
+        kv = k_t[..., :, None] * v_t[..., None, :]               # (B, H, K, K)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = s * w_t[..., :, None] + kv
+        return s, o_t
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))     # (L, B, H, K)
+    state, o = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(o, 0, 1), state
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    hs = cfg.ssm.head_size
+    return {
+        "s": jnp.zeros((batch, d // hs, hs, hs), jnp.float32),
+        "x_prev": jnp.zeros((batch, d), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def rwkv6_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
+                  state: Dict | None = None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence (train / prefill) time-mix. Returns (out, final_state)."""
+    b, l, d = x.shape
+    hs = cfg.ssm.head_size
+    if state is None:
+        state = init_rwkv6_state(cfg, b, x.dtype)
+    r, k, v, g, w = _projections(params, x, state["x_prev"], cfg)
+    u = params["u"].astype(jnp.float32)
+    o, s_new = _recurrence(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), w, u, state["s"])
+    o = rmsnorm(params["o_norm"], o.astype(x.dtype), cfg.norm_eps)
+    o = (o * jax.nn.silu(g)).reshape(b, l, d)
+    new_state = {"s": s_new, "x_prev": x[:, -1, :], "idx": state["idx"] + l}
+    return o @ params["wo"], new_state
+
+
+def rwkv6_decode(params: Dict, x: jax.Array, state: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token decode: identical math at L=1 (O(1) state — no KV cache)."""
+    return rwkv6_forward(params, x, cfg, state)

@@ -1,0 +1,381 @@
+"""Composable transformer assembly for the ten assigned families.
+
+A model is a sequence of *layer groups*; one group is the config's layer
+``pattern`` (e.g. jamba's ``[attn, 7 x mamba]`` block, gemma3's 17-layer
+local/global period, or a single layer for uniform stacks).  Groups are
+homogeneous, so the stack runs as ``lax.scan`` over stacked group params —
+which keeps the HLO one-group-sized for the 512-device dry-run — with
+``jax.checkpoint`` per group for training remat.  ``scan=False`` unrolls the
+python loop (used by smoke tests and by the dry-run *cost extraction*, since
+XLA's cost_analysis counts a while-loop body once; see EXPERIMENTS.md
+§Methodology).
+
+Modes:
+  * ``train``   — full sequence, no caches.
+  * ``prefill`` — full sequence, returns per-layer caches (KV / latent / SSM
+                  state) for subsequent decode.
+  * ``decode``  — one token against the caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.train.sharding import constrain
+
+ATTN_KINDS = ("attn", "local")
+
+_ACT_PREFS = {
+    "rep": ("batch", None, None),
+    "seq": ("batch", ("model",), None),
+    "d": ("batch", None, ("model",)),
+}
+
+
+def _act_constrain(x, cfg):
+    if cfg.act_shard == "off":
+        return x
+    return constrain(x, _ACT_PREFS[cfg.act_shard])
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, mixer: str, ffn: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict = {"norm1": L.init_rmsnorm(cfg.d_model, dtype)}
+    if mixer in ATTN_KINDS:
+        p["mixer"] = attn.init_gqa(k1, cfg, dtype)
+        if cfg.encdec is not None:
+            p["cross"] = attn.init_cross(k3, cfg, dtype)
+            p["norm_cross"] = L.init_rmsnorm(cfg.d_model, dtype)
+    elif mixer == "mla":
+        p["mixer"] = attn.init_mla(k1, cfg, dtype)
+    elif mixer == "rwkv6":
+        p["mixer"] = rwkv_mod.init_rwkv6(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(k1, cfg, dtype)
+    else:
+        raise ValueError(f"unknown mixer kind {mixer!r}")
+    if ffn == "mlp":
+        p["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+    elif ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(k2, cfg, dtype)
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dtype)
+    elif ffn != "none":
+        raise ValueError(f"unknown ffn kind {ffn!r}")
+    return p
+
+
+def init_group(key, cfg: ModelConfig, dtype) -> Dict:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {f"l{i}": init_layer(keys[i], cfg, mixer, ffn, dtype)
+            for i, (mixer, ffn) in enumerate(cfg.pattern)}
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.init_rmsnorm(cfg.d_model, dtype),
+        "mixer": attn.init_gqa(k1, cfg, dtype),
+        "norm2": L.init_rmsnorm(cfg.d_model, dtype),
+        "ffn": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    k_e, k_g, k_h, k_enc = jax.random.split(key, 4)
+    group_keys = jax.random.split(k_g, cfg.n_groups)
+    groups = jax.vmap(lambda k: init_group(k, cfg, dtype))(group_keys)
+    params: Dict = {
+        "embed": L.init_embedding(k_e, cfg.vocab, cfg.d_model, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "groups": groups,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"table": L._normal(k_h, (cfg.vocab, cfg.d_model),
+                                             cfg.d_model ** -0.5, dtype)}
+    if cfg.encdec is not None:
+        enc_keys = jax.random.split(k_enc, cfg.encdec.n_enc_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+            "norm": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+    return params
+
+
+def n_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, mixer: str, batch: int, cache_len: int,
+                 dtype) -> Dict:
+    c: Dict = {}
+    if mixer in ATTN_KINDS:
+        window = cfg.sliding_window if mixer == "local" else None
+        c["self"] = attn.init_gqa_cache(cfg, batch, cache_len, window=window,
+                                        dtype=dtype)
+        if cfg.encdec is not None:
+            t = cfg.encdec.enc_len
+            c["cross"] = {
+                "k": jnp.zeros((batch, cfg.n_kv_heads, t, cfg.hd), dtype),
+                "v": jnp.zeros((batch, cfg.n_kv_heads, t, cfg.hd), dtype),
+            }
+    elif mixer == "mla":
+        c["self"] = attn.init_mla_cache(cfg, batch, cache_len, dtype)
+    elif mixer == "rwkv6":
+        c["state"] = rwkv_mod.init_rwkv6_state(cfg, batch, dtype)
+    elif mixer == "mamba":
+        c["state"] = mamba_mod.init_mamba_state(cfg, batch, dtype)
+    return c
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                dtype=jnp.float32) -> Dict:
+    """Stacked (n_groups-leading) cache pytree for all layers."""
+    one = {f"l{i}": _layer_cache(cfg, mixer, batch, cache_len, dtype)
+           for i, (mixer, _) in enumerate(cfg.pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape), one)
+
+
+# ---------------------------------------------------------------------------
+# one group of layers
+# ---------------------------------------------------------------------------
+
+def group_step(x: jax.Array, gp: Dict, cache_g: Optional[Dict],
+               cfg: ModelConfig, *, mode: str, enc: Optional[jax.Array],
+               cache_len: int, q_chunk: Optional[int], unroll: bool
+               ) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Apply one layer group. Returns (x, new_caches, moe_aux)."""
+    b = x.shape[0]
+    new_cache: Dict = {}
+    aux = jnp.zeros((2,), jnp.float32)           # [moe_aux_loss, moe_drop_frac]
+
+    def one_layer(lp, x, ce, i):
+        mixer, ffn = cfg.pattern[i]
+        nce: Dict = {}
+        aux_i = jnp.zeros((2,), jnp.float32)
+        h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        window = cfg.sliding_window if mixer == "local" else None
+
+        if mixer in ATTN_KINDS:
+            if mode == "decode":
+                o, nce["self"] = attn.gqa_decode(lp["mixer"], h, ce["self"], cfg,
+                                                 window=window)
+            else:
+                o, (k, v) = attn.gqa_forward(lp["mixer"], h, cfg, window=window,
+                                             q_chunk=q_chunk, unroll=unroll,
+                                             return_kv=True)
+                if mode == "prefill":
+                    c0 = attn.init_gqa_cache(cfg, b, cache_len, window=window,
+                                             dtype=x.dtype)
+                    nce["self"] = attn.fill_gqa_cache(c0, k, v, window=window)
+        elif mixer == "mla":
+            if mode == "decode":
+                o, nce["self"] = attn.mla_decode(lp["mixer"], h, ce["self"], cfg)
+            else:
+                o, (c_kv, k_rope) = attn.mla_forward(
+                    lp["mixer"], h, cfg, q_chunk=q_chunk, unroll=unroll,
+                    return_latent=True)
+                if mode == "prefill":
+                    c0 = attn.init_mla_cache(cfg, b, cache_len, x.dtype)
+                    nce["self"] = attn.fill_mla_cache(c0, c_kv, k_rope)
+        elif mixer == "rwkv6":
+            state = ce["state"] if ce is not None else None
+            o, st = rwkv_mod.rwkv6_forward(lp["mixer"], h, cfg, state)
+            if mode != "train":
+                nce["state"] = st
+        elif mixer == "mamba":
+            state = ce["state"] if ce is not None else None
+            o, st = mamba_mod.mamba_forward(lp["mixer"], h, cfg, state)
+            if mode != "train":
+                nce["state"] = st
+        x = x + o
+
+        if cfg.encdec is not None and mixer in ATTN_KINDS:
+            hc = L.rmsnorm(lp["norm_cross"], x, cfg.norm_eps)
+            if mode == "decode":
+                oc = attn.cross_decode(lp["cross"], hc, ce["cross"], cfg)
+                nce["cross"] = ce["cross"]
+            else:
+                oc = attn.cross_forward(lp["cross"], hc, enc, cfg)
+                if mode == "prefill":
+                    nce["cross"] = attn.make_cross_cache(lp["cross"], enc, cfg)
+            x = x + oc
+
+        if ffn != "none":
+            h2 = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            if ffn == "mlp":
+                f = L.mlp(lp["ffn"], h2)
+            else:
+                f, mm = moe_mod.moe_forward(lp["ffn"], h2, cfg)
+                aux_i = aux_i + jnp.stack([mm["moe_aux_loss"], mm["moe_drop_frac"]])
+            x = x + f
+        x = _act_constrain(x, cfg)
+        return x, nce, aux_i
+
+    for i, _ in enumerate(cfg.pattern):
+        lp = gp[f"l{i}"]
+        ce = cache_g[f"l{i}"] if cache_g is not None else None
+        if cfg.layer_remat and mode == "train":
+            # nested (hierarchical) remat: the outer per-group checkpoint
+            # re-runs the group forward; per-layer checkpoints keep only one
+            # layer's intermediates live during that recompute — essential
+            # for long patterns (gemma3's 17-layer period, jamba's 8).
+            x, nce, aux_i = jax.checkpoint(
+                lambda lp_, x_, i_=i: one_layer(lp_, x_, None, i_))(lp, x)
+        else:
+            x, nce, aux_i = one_layer(lp, x, ce, i)
+        aux = aux + aux_i
+        new_cache[f"l{i}"] = nce
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)[:, :d]
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array, *,
+           scan: bool = True, q_chunk: Optional[int] = None,
+           unroll: bool = False) -> jax.Array:
+    """Whisper-style bidirectional encoder over precomputed frame embeddings
+    (the conv frontend is the assignment-mandated stub)."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(xc, lp):
+        h = L.rmsnorm(lp["norm1"], xc, cfg.norm_eps)
+        xc = xc + attn.gqa_forward(lp["mixer"], h, cfg, causal=False,
+                                   q_chunk=q_chunk, unroll=unroll)
+        h2 = L.rmsnorm(lp["norm2"], xc, cfg.norm_eps)
+        return xc + L.mlp(lp["ffn"], h2), None
+
+    if scan:
+        x, _ = jax.lax.scan(lambda c, lp: body(c, lp), x,
+                            params["encoder"]["layers"])
+    else:
+        n_enc = jax.tree.leaves(params["encoder"]["layers"])[0].shape[0]
+        for i in range(n_enc):
+            lp = jax.tree.map(lambda t: t[i], params["encoder"]["layers"])
+            x, _ = body(x, lp)
+    return L.rmsnorm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
+            patches: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            mode: str = "train", caches: Optional[Dict] = None,
+            cache_len: Optional[int] = None, q_chunk: Optional[int] = None,
+            unroll: bool = False, scan: bool = True):
+    """Returns (hidden, new_caches, aux); new_caches is None in train mode."""
+    assert mode in ("train", "prefill", "decode"), mode
+    enc = None
+    if cfg.encdec is not None and mode != "decode":
+        assert frames is not None, "enc-dec needs frame embeddings"
+        enc = encode(params, cfg, frames, scan=scan, q_chunk=q_chunk,
+                     unroll=unroll)
+
+    x = L.embed(params["embed"], tokens)
+    if cfg.n_patches and mode != "decode":
+        assert patches is not None, "vlm needs patch embeddings"
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x = _act_constrain(x, cfg)
+    if cache_len is None:
+        cache_len = x.shape[1]
+
+    step = functools.partial(group_step, cfg=cfg, mode=mode, enc=enc,
+                             cache_len=cache_len, q_chunk=q_chunk,
+                             unroll=unroll)
+
+    if scan and cfg.n_groups > 1:
+        def body(carry, inp):
+            xc, aux = carry
+            gp, cache_g = inp
+            xc, nc, aux_i = step(xc, gp, cache_g)
+            return (xc, aux + aux_i), nc
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+        xs = (params["groups"], caches)
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((2,), jnp.float32)), xs)
+    else:
+        aux = jnp.zeros((2,), jnp.float32)
+        caches_out = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda t: t[g], params["groups"])
+            cache_g = jax.tree.map(lambda t: t[g], caches) if caches is not None else None
+            x, nc, aux_i = step(x, gp, cache_g)
+            aux = aux + aux_i
+            caches_out.append(nc)
+        new_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches_out)
+                      if caches_out and caches_out[0] else None)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if mode == "train":
+        new_caches = None
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# heads / losses
+# ---------------------------------------------------------------------------
+
+def _unembed_table(params: Dict) -> jax.Array:
+    return params["head"]["table"] if "head" in params else params["embed"]["table"]
+
+
+def ce_loss(params: Dict, cfg: ModelConfig, hidden: jax.Array,
+            targets: jax.Array, *, chunk: int = 1024,
+            unroll: bool = False) -> jax.Array:
+    """Sequence-chunked cross-entropy: the (B, C, V) logits block is the only
+    vocab-sized live buffer (full (B, S, V) logits at train shapes would be
+    TBs).  The chunk body is checkpointed so backward re-forms each block."""
+    table = _unembed_table(params).astype(jnp.float32)
+    b, s, d = hidden.shape
+    if s % chunk or s <= chunk:
+        chunk = s
+
+    def body(carry, i):
+        hs = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        ts = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        logits = hs.astype(jnp.float32) @ table.T                  # (B, C, V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0.0),
+                            jnp.arange(s // chunk, dtype=jnp.int32),
+                            unroll=unroll)
+    return total / (b * s)
+
+
+def logits_last(params: Dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    """(B, S, d) -> (B, V) float32 logits of the last position."""
+    table = _unembed_table(params)
+    return hidden[:, -1].astype(jnp.float32) @ table.astype(jnp.float32).T

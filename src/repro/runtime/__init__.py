@@ -1,0 +1,2 @@
+"""Distributed runtime substrate: fault tolerance, straggler mitigation,
+gradient compression, manual compute/communication overlap."""

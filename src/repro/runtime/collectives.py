@@ -1,0 +1,105 @@
+"""Explicit collectives: chunked ring all-reduce with optional int8
+compression — the distributed-optimization layer for slow (cross-pod) links.
+
+GSPMD's automatic all-reduce is optimal on fast ICI; across pods the links
+are the bottleneck and two classic tricks apply:
+
+* **chunked ring** (``ppermute``): the reduce-scatter/all-gather ring is
+  expressed explicitly so each chunk's transfer overlaps the reduction of
+  the previous chunk (XLA pipelines successive ppermutes), and so we can
+  transform the payload per hop;
+* **int8 payload** with per-chunk scales: 4x fewer bytes over the link at
+  the cost of quantization error on partial sums — pair with error feedback
+  (train/compress.py) at the caller.
+
+``ring_allreduce`` runs inside ``shard_map`` over one mesh axis.  With
+``compress=True`` the wire format of every hop is (int8 payload, f32
+scale); accumulation happens in f32 after dequantize, so error does not
+compound multiplicatively with ring length.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.train.compress import dequantize, quantize
+
+
+def _ring_allreduce_local(x: jax.Array, axis_name: str, *,
+                          compress: bool = False) -> jax.Array:
+    """Reduce-scatter + all-gather ring over ``axis_name`` (inside shard_map).
+
+    x: (n*chunk,) flat per-device values (same logical tensor everywhere);
+    returns the all-reduced tensor.
+    """
+    n = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    if n == 1:
+        return x
+    chunks = x.reshape(n, -1)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def wire(v):
+        if not compress:
+            return v, jnp.float32(0)
+        q, s = quantize(v)
+        return q, s
+
+    def unwire(q, s):
+        return dequantize(q, s) if compress else q
+
+    # --- reduce-scatter: after n-1 hops, device d owns the full sum of
+    # chunk (d+1) % n ---
+    def rs_body(i, acc):
+        # send the partial sum of chunk (me - i), receive (me - i - 1)
+        idx = (me - i) % n
+        send = acc[idx]
+        q, s = wire(send)
+        q_r = jax.lax.ppermute(q, axis_name, perm)
+        s_r = jax.lax.ppermute(s, axis_name, perm)
+        recv = unwire(q_r, s_r).astype(acc.dtype)
+        tgt = (me - i - 1) % n
+        return acc.at[tgt].add(recv)
+
+    acc = jax.lax.fori_loop(0, n - 1, rs_body, chunks.astype(jnp.float32))
+
+    # --- all-gather: circulate the owned (fully reduced) chunks ---
+    def ag_body(i, acc):
+        idx = (me + 1 - i) % n
+        send = acc[idx]
+        q, s = wire(send)
+        q_r = jax.lax.ppermute(q, axis_name, perm)
+        s_r = jax.lax.ppermute(s, axis_name, perm)
+        recv = unwire(q_r, s_r).astype(acc.dtype)
+        tgt = (me - i) % n
+        return acc.at[tgt].set(recv)
+
+    acc = jax.lax.fori_loop(0, n - 1, ag_body, acc)
+    return acc.reshape(x.shape).astype(x.dtype)
+
+
+def make_ring_allreduce(mesh: Mesh, axis: str, *, compress: bool = False):
+    """Jitted ring all-reduce.
+
+    Input: (n, k) sharded on dim 0 over ``axis`` — one summand per device.
+    Output: (n, k) sharded the same way, every row holding the full sum
+    (i.e. each device's local copy of the all-reduced tensor).
+    """
+    n = mesh.shape[axis]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=P(axis, None), out_specs=P(axis, None))
+    def body(x_local):                       # (1, k) on each device
+        flat = x_local.reshape(-1)
+        pad = (-flat.shape[0]) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        out = _ring_allreduce_local(flat, axis, compress=compress)
+        return out[: x_local.size].reshape(x_local.shape)
+
+    return jax.jit(body)

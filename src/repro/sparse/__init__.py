@@ -1,0 +1,24 @@
+"""Sparse-matrix substrate: CSR containers, generators, ordering, numeric LU.
+
+This subpackage is host-side (numpy/scipy) infrastructure feeding the JAX core.
+"""
+from repro.sparse.csr import CSRMatrix, csr_from_coo, csr_from_dense, csr_to_ell, transpose_csr
+from repro.sparse.matrices import (
+    grid2d_laplacian,
+    grid3d_laplacian,
+    circuit_like,
+    economic_like,
+    chemical_like,
+    random_pattern,
+    banded_random,
+    paper_dataset_analogue,
+    PAPER_DATASETS,
+)
+from repro.sparse.ordering import rcm_order, permute_csr, natural_order, random_order
+
+__all__ = [
+    "CSRMatrix", "csr_from_coo", "csr_from_dense", "csr_to_ell", "transpose_csr",
+    "grid2d_laplacian", "grid3d_laplacian", "circuit_like", "economic_like",
+    "chemical_like", "random_pattern", "banded_random", "paper_dataset_analogue",
+    "PAPER_DATASETS", "rcm_order", "permute_csr", "natural_order", "random_order",
+]

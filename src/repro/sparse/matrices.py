@@ -1,0 +1,165 @@
+"""Synthetic sparse-matrix generators.
+
+The paper evaluates on 14 SuiteSparse matrices (Table I).  This container has no
+network access, so we synthesize *analogues* that match the application domains
+and the structural statistics that matter to the algorithm under test:
+order, nnz/row, structural symmetry, and fill-heaviness.  `PAPER_DATASETS`
+maps the paper's dataset codes to scaled-down analogues with the same character.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix, csr_from_coo
+
+
+def _with_diagonal(n: int, rows, cols):
+    rows = np.concatenate([np.asarray(rows, dtype=np.int64), np.arange(n, dtype=np.int64)])
+    cols = np.concatenate([np.asarray(cols, dtype=np.int64), np.arange(n, dtype=np.int64)])
+    return rows, cols
+
+
+def grid2d_laplacian(nx: int, ny: int | None = None) -> CSRMatrix:
+    """5-point stencil on an nx × ny grid — structural-problem analogue (BC, AU)."""
+    ny = ny or nx
+    idx = np.arange(nx * ny).reshape(nx, ny)
+    rows, cols = [], []
+    for di, dj in ((0, 1), (1, 0)):
+        a = idx[: nx - di, : ny - dj].ravel()
+        b = idx[di:, dj:].ravel()
+        rows += [a, b]
+        cols += [b, a]
+    rows, cols = np.concatenate(rows), np.concatenate(cols)
+    rows, cols = _with_diagonal(nx * ny, rows, cols)
+    return csr_from_coo(nx * ny, rows, cols)
+
+
+def grid3d_laplacian(nx: int, ny: int | None = None, nz: int | None = None) -> CSRMatrix:
+    """7-point stencil — CFD/electromagnetics analogue (RM, DI)."""
+    ny = ny or nx
+    nz = nz or nx
+    idx = np.arange(nx * ny * nz).reshape(nx, ny, nz)
+    rows, cols = [], []
+    for d in ((0, 0, 1), (0, 1, 0), (1, 0, 0)):
+        a = idx[: nx - d[0], : ny - d[1], : nz - d[2]].ravel()
+        b = idx[d[0]:, d[1]:, d[2]:].ravel()
+        rows += [a, b]
+        cols += [b, a]
+    rows, cols = np.concatenate(rows), np.concatenate(cols)
+    rows, cols = _with_diagonal(nx * ny * nz, rows, cols)
+    return csr_from_coo(nx * ny * nz, rows, cols)
+
+
+def circuit_like(n: int, *, avg_deg: float = 4.0, hub_fraction: float = 0.002,
+                 hub_deg: int = 64, seed: int = 0) -> CSRMatrix:
+    """Circuit-simulation analogue (G3, HM, PR, TT): sparse, a few high-degree
+    rails (power/ground nets), low-ish structural symmetry."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg)
+    rows = rng.integers(0, n, size=m)
+    cols = rng.integers(0, n, size=m)
+    # local coupling: most connections are near-diagonal (placement locality)
+    local = rng.integers(0, n, size=m)
+    off = rng.integers(1, max(2, n // 100), size=m)
+    rows = np.concatenate([rows, local])
+    cols = np.concatenate([cols, np.minimum(n - 1, local + off)])
+    n_hubs = max(1, int(n * hub_fraction))
+    hubs = rng.choice(n, size=n_hubs, replace=False)
+    hub_deg = min(hub_deg, n // 2)
+    for h in hubs:
+        tied = rng.choice(n, size=hub_deg, replace=False)
+        rows = np.concatenate([rows, np.full(hub_deg, h), tied])
+        cols = np.concatenate([cols, tied, np.full(hub_deg, h)])
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
+def economic_like(n: int, *, block: int = 32, coupling: float = 3.0, seed: int = 0) -> CSRMatrix:
+    """Economic-modelling analogue (G7, MK): highly *asymmetric* block couplings
+    (struct. symm ~0.03-0.07 in Table I)."""
+    rng = np.random.default_rng(seed)
+    m = int(n * coupling)
+    # directed inter-block flows: i in block b reads from block b' (one-way)
+    rows = rng.integers(0, n, size=m)
+    shift = (rng.integers(1, max(2, n // block), size=m) * block)
+    cols = (rows + shift) % n
+    # sparse intra-block (bidirectional, small)
+    r2 = rng.integers(0, n, size=m // 4)
+    c2 = (r2 // block) * block + rng.integers(0, block, size=m // 4)
+    c2 = np.minimum(c2, n - 1)
+    rows = np.concatenate([rows, r2, c2])
+    cols = np.concatenate([cols, c2, r2])
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
+def chemical_like(n: int, *, stage: int = 24, seed: int = 0) -> CSRMatrix:
+    """Chemical-engineering analogue (LH): cascaded stages, near-zero symmetry."""
+    rng = np.random.default_rng(seed)
+    rows, cols = [], []
+    for s in range(0, n - stage, stage):
+        # each stage couples forward into the next stage only (flowsheet)
+        r = np.repeat(np.arange(s, s + stage), 3)
+        c = s + stage + rng.integers(0, stage, size=3 * stage)
+        c = np.minimum(c, n - 1)
+        rows.append(r)
+        cols.append(c)
+        # dense-ish lower stage block
+        r2 = s + rng.integers(0, stage, size=4 * stage)
+        c2 = s + rng.integers(0, stage, size=4 * stage)
+        rows.append(r2)
+        cols.append(c2)
+    rows, cols = np.concatenate(rows), np.concatenate(cols)
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
+def random_pattern(n: int, *, density: float = 0.01, symmetric: bool = False,
+                   seed: int = 0) -> CSRMatrix:
+    rng = np.random.default_rng(seed)
+    m = max(n, int(n * n * density))
+    rows = rng.integers(0, n, size=m)
+    cols = rng.integers(0, n, size=m)
+    if symmetric:
+        rows, cols = np.concatenate([rows, cols]), np.concatenate([cols, rows])
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
+def banded_random(n: int, *, band: int = 8, fill: float = 0.5, seed: int = 0) -> CSRMatrix:
+    rng = np.random.default_rng(seed)
+    m = int(n * band * fill)
+    rows = rng.integers(0, n, size=m)
+    off = rng.integers(-band, band + 1, size=m)
+    cols = np.clip(rows + off, 0, n - 1)
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
+# ---------------------------------------------------------------------------
+# Paper Table I analogues (scaled to CPU-tractable sizes, same character).
+# key: (generator, kwargs, description)
+# ---------------------------------------------------------------------------
+PAPER_DATASETS: Dict[str, tuple] = {
+    "BB": (grid3d_laplacian, dict(nx=12), "CFD analogue of BBMAT"),
+    "BC": (grid2d_laplacian, dict(nx=40), "structural analogue of BCSSTK18"),
+    "EP": (grid2d_laplacian, dict(nx=36, ny=28), "thermal analogue of EPB2"),
+    "G7": (economic_like, dict(n=1536, seed=7), "economic analogue of G7JAC200SC"),
+    "LH": (chemical_like, dict(n=1800, seed=3), "chem-eng analogue of LHR71C"),
+    "MK": (economic_like, dict(n=1280, block=16, seed=11), "economic analogue of MARK3JAC140SC"),
+    "RM": (grid3d_laplacian, dict(nx=11), "CFD analogue of RMA10"),
+    "AU": (grid3d_laplacian, dict(nx=13), "structural analogue of AUDIKW_1"),
+    "DI": (grid3d_laplacian, dict(nx=12, ny=12, nz=10), "EM analogue of DIELFILTERV2REAL"),
+    "G3": (circuit_like, dict(n=2048, seed=5), "circuit analogue of G3_CIRCUIT"),
+    "HM": (circuit_like, dict(n=2048, avg_deg=2.0, seed=9), "circuit analogue of HAMRLE3"),
+    "PR": (circuit_like, dict(n=1600, hub_deg=96, seed=13), "circuit analogue of PRE2"),
+    "ST": (grid3d_laplacian, dict(nx=12, ny=11, nz=11), "bioengineering analogue of STOMACH"),
+    "TT": (circuit_like, dict(n=1200, avg_deg=5.0, seed=17), "circuit analogue of TWOTONE"),
+}
+
+
+def paper_dataset_analogue(code: str) -> CSRMatrix:
+    gen, kwargs, _ = PAPER_DATASETS[code]
+    return gen(**kwargs)

@@ -1,0 +1,2 @@
+"""Training substrate: sharding rules, AdamW+ZeRO-1, step factories,
+gradient compression."""

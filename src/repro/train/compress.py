@@ -1,0 +1,51 @@
+"""Int8 gradient compression with error feedback.
+
+Distributed-optimization trick for the cross-pod gradient reduce: gradients
+are quantized per-leaf to int8 with a single fp32 scale (max-abs / 127), and
+the quantization error is carried into the next step ("error feedback" /
+EF-SGD), which restores convergence to near-fp32 quality.
+
+Two integration points:
+
+* ``compress_decompress`` — inside a single jit step, applied at the
+  optimizer boundary (what the bundled train driver uses; the reduction
+  itself is handled by GSPMD, so this demonstrates the numerics);
+* ``runtime.collectives.ring_allreduce(compress=True)`` — the explicit
+  shard_map ring where the int8 payload is what actually crosses the links
+  (4x ICI traffic cut on the 'pod' axis; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, err):
+    """Returns (dequantized grads, new error feedback)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize(g32)
+        deq = dequantize(q, scale)
+        return deq, g32 - deq
+
+    pairs = jax.tree.map(one, grads, err)
+    deq = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err

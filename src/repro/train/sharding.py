@@ -1,0 +1,270 @@
+"""Sharding rules: params (TP + optional FSDP), optimizer state (ZeRO-1),
+caches, batches, and in-model activation constraints.
+
+The production mesh is ('data', 'model') single-pod / ('pod', 'data',
+'model') multi-pod (launch/mesh.py).  Baseline layout:
+
+* batch over ('pod', 'data');
+* tensor parallelism over 'model': attention head projections, FFN hidden,
+  MoE expert axis (EP), vocab of the (un)embedding;
+* FSDP (param + gradient sharding over cfg.fsdp_axes) for archs whose
+  weights exceed a single chip (deepseek-v3, jamba);
+* ZeRO-1: optimizer moments/master sharded over 'data' even when the param
+  itself is replicated there;
+* long-context decode caches: sequence dimension sharded over whatever axes
+  the batch cannot use (batch=1 at long_500k).
+
+Divisibility is checked per rule and the rule silently degrades to
+replication when it fails (e.g. qwen3's 40 heads on a 16-wide model axis
+shard as flattened head*dim columns instead).
+
+``constrain``/``set_context`` give model code mesh-independent activation
+annotations: models call ``constrain(x, ("batch", None, "model"))`` and the
+names resolve (or no-op) against the ambient step context, so the same model
+file serves the 1-device smoke test and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+_FSDP_MIN_SIZE = 1 << 16    # don't FSDP-shard tiny tensors
+
+_tls = threading.local()
+
+
+class _Ctx:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def set_context(mesh: Optional[Mesh], cfg: Optional[ModelConfig]):
+    _tls.ctx = _Ctx(mesh, cfg) if mesh is not None else None
+
+
+def get_context() -> Optional[_Ctx]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextmanager
+def step_context(mesh: Mesh, cfg: ModelConfig):
+    prev = get_context()
+    set_context(mesh, cfg)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def _resolve(kind, ctx: _Ctx) -> Tuple[str, ...]:
+    """Map a rule name to concrete mesh axes."""
+    if kind is None:
+        return ()
+    if isinstance(kind, tuple):
+        out = []
+        for k in kind:
+            out.extend(_resolve(k, ctx))
+        return tuple(out)
+    if kind == "batch":
+        return ctx.batch_axes
+    if kind in ctx.mesh.axis_names:
+        return (kind,)
+    return ()
+
+
+def auto_spec(shape: Sequence[int], prefs, ctx: _Ctx) -> P:
+    """Pick, per dim, the first preference whose axes are unused and divide
+    the dim.  ``prefs[i]`` is None | name | tuple | list-of-candidates."""
+    used: set = set()
+    spec = []
+    for size, pref in zip(shape, prefs):
+        cands = pref if isinstance(pref, list) else [pref]
+        chosen = None
+        for cand in cands:
+            axes = _resolve(cand, ctx)
+            if not axes or any(a in used for a in axes):
+                continue
+            total = math.prod(ctx.mesh.shape[a] for a in axes)
+            if total > 1 and size % total == 0:
+                chosen = axes
+                break
+        if chosen:
+            used.update(chosen)
+            spec.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def constrain(x: jax.Array, prefs) -> jax.Array:
+    """Mesh-independent with_sharding_constraint; no-op without a context."""
+    ctx = get_context()
+    if ctx is None or x.ndim != len(prefs):
+        return x
+    spec = auto_spec(x.shape, prefs, ctx)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "wg", "wr", "w_gate", "w_up", "w_in", "wq_b",
+        "wkv_b", "w_lora_a", "w_dt"}          # (in, out): TP on out
+_ROW = {"wo", "w_down", "w_out"}              # (in, out): TP on in
+_IN_ONLY = {"w_xproj", "a_log"}               # (di, *): TP on dim 0
+_CH_VEC = {"conv_b", "d_skip", "dt_bias"}     # (di,): TP
+_LORA_IN = {"wq_a", "wkv_a"}                  # (d, r): FSDP on d only
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                cfg: ModelConfig) -> P:
+    names = path.split("/")
+    name = names[-1]
+    grouped = names[0] in ("groups", "encoder")
+    dims = list(shape[1:]) if grouped else list(shape)
+    model = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    fsdp_axes = tuple(a for a in cfg.fsdp_axes if a in mesh.axis_names)
+    fsdp = math.prod(mesh.shape[a] for a in fsdp_axes) if fsdp_axes else 1
+    big = math.prod(dims) >= _FSDP_MIN_SIZE
+
+    def m(i):  # model axis if divisible
+        return "model" if model > 1 and dims[i] % model == 0 else None
+
+    def f(i):  # fsdp axes if divisible and worthwhile
+        return fsdp_axes if fsdp > 1 and big and dims[i] % fsdp == 0 else None
+
+    # seq-sharded attention replaces head-TP when n_heads % tp != 0: the
+    # attention projections then skip model sharding (FSDP only) and the
+    # SDPA q-chunks shard over 'model' instead (attention.py)
+    attn_no_tp = (cfg.seq_shard_attention
+                  and name in ("wq", "wk", "wv", "wo")
+                  and "mixer" in names)
+
+    spec = [None] * len(dims)
+    if name == "table" and len(dims) == 2:                  # (V, d) embed/head
+        spec = [m(0), f(1)]
+    elif name in _COL and len(dims) == 2:                   # (d, out)
+        spec = [f(0), None if attn_no_tp else m(1)]
+    elif name in _ROW and len(dims) == 2:                   # (in, d)
+        spec = [None if attn_no_tp else m(0), f(1)]
+    elif name in ("w_gate", "w_up") and len(dims) == 3:     # (E, d, de) experts
+        spec = [m(0), f(1), None]
+    elif name == "w_down" and len(dims) == 3:               # (E, de, d)
+        spec = [m(0), None, f(2)]
+    elif name in _IN_ONLY and len(dims) == 2:               # (di, *)
+        spec = [m(0), None]
+    elif name == "conv_w" and len(dims) == 2:               # (d_conv, di)
+        spec = [None, m(1)]
+    elif name in _CH_VEC and len(dims) == 1:                # (di,)
+        spec = [m(0)]
+    elif name in _LORA_IN and len(dims) == 2:               # (d, r)
+        spec = [f(0), None]
+    # everything else (norms, router, u, mix, w_base) replicates
+    if grouped:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_shardings(param_shapes, mesh: Mesh, cfg: ModelConfig):
+    """Pytree of NamedSharding matching a pytree of ShapeDtypeStruct/arrays."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_pspec(_path_str(path), leaf.shape, mesh, cfg))
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def zero1_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: additionally shard optimizer state over 'data' (largest
+    still-unsharded divisible dim).  Params already FSDP'd keep their spec."""
+    if "data" not in mesh.axis_names:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    if "data" in used:
+        return spec
+    d = mesh.shape["data"]
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if entries[i] is None and shape[i] % d == 0 and shape[i] >= d:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def opt_shardings(param_shardings_tree, param_shapes, mesh: Mesh):
+    def one(sh, leaf):
+        return NamedSharding(mesh, zero1_pspec(sh.spec, leaf.shape, mesh))
+    return jax.tree.map(one, param_shardings_tree, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# cache / batch shardings
+# ---------------------------------------------------------------------------
+
+_SEQ_PREFS = [("data", "model"), ("data",), ("model",)]   # for seq-dim sharding
+
+
+def cache_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                cfg: ModelConfig) -> P:
+    """Caches are stacked (n_groups leading).  Batch shards first; KV heads
+    over 'model' when divisible; otherwise the sequence dim picks up the
+    spare axes (sequence-sharded cache for long_500k's batch=1)."""
+    ctx = _Ctx(mesh, cfg)
+    name = path.split("/")[-1]
+    dims = shape[1:]                                     # drop group axis
+    if name in ("k", "v") and len(dims) == 4:            # (B, Hkv, T, hd)
+        spec = auto_spec(dims, ["batch", "model", _SEQ_PREFS, None], ctx)
+    elif name == "pos" and len(dims) == 2:               # (B, T)
+        spec = auto_spec(dims, ["batch", _SEQ_PREFS], ctx)
+    elif name == "ckv" and len(dims) == 3:               # (B, T, r)
+        spec = auto_spec(dims, ["batch", _SEQ_PREFS, None], ctx)
+    elif name == "krope" and len(dims) == 4:             # (B, 1, T, rd)
+        spec = auto_spec(dims, ["batch", None, _SEQ_PREFS, None], ctx)
+    elif name == "s" and len(dims) == 4:                 # rwkv (B, H, K, K)
+        spec = auto_spec(dims, ["batch", "model", None, None], ctx)
+    elif name == "h" and len(dims) == 3:                 # mamba (B, di, N)
+        spec = auto_spec(dims, ["batch", "model", None], ctx)
+    elif name == "conv" and len(dims) == 3:              # (B, dc-1, di)
+        spec = auto_spec(dims, ["batch", None, "model"], ctx)
+    elif name == "x_prev" and len(dims) == 2:            # (B, d)
+        spec = auto_spec(dims, ["batch", "model"], ctx)
+    else:                                                # idx and friends
+        spec = P()
+    return P(*([None] + list(spec)))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, cfg: ModelConfig):
+    def one(path, leaf):
+        return NamedSharding(mesh, cache_pspec(_path_str(path), leaf.shape, mesh, cfg))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def batch_pspec(shape: Tuple[int, ...], mesh: Mesh, cfg: ModelConfig) -> P:
+    ctx = _Ctx(mesh, cfg)
+    return auto_spec(shape, ["batch"] + [None] * (len(shape) - 1), ctx)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh, cfg: ModelConfig):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_pspec(leaf.shape, mesh, cfg)),
+        batch_shapes)

@@ -1,0 +1,228 @@
+"""Step factories: jitted train / prefill / decode steps with full sharding.
+
+``make_*_step`` returns a ``Step`` bundle: the jitted function, the input
+ShapeDtypeStructs (ready for ``.lower()`` — the multi-pod dry-run never
+allocates), and the shardings.  The same factories serve the real training
+driver (launch/train.py) and the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.train import sharding as shd
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@dataclasses.dataclass
+class Step:
+    fn: Callable                      # jitted
+    args: Tuple[Any, ...]             # ShapeDtypeStruct pytrees, jit-ready
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _q_chunk(seq_len: int) -> Optional[int]:
+    return 1024 if seq_len > 1024 else None
+
+
+def _replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStructs for one global batch (train / prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.n_patches if cfg.n_patches else s
+    specs: Dict = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.n_patches:
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dtype)
+    if cfg.encdec is not None:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encdec.enc_len, cfg.d_model), dtype)
+    return specs
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: tf.init_params(k, cfg, dtype), jax.random.key(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(tf.init_caches, cfg, batch, cache_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                    dtype=jnp.bfloat16, acfg: AdamWConfig = AdamWConfig(),
+                    scan: bool = True, unroll: bool = False,
+                    q_chunk: Optional[int] = None, donate: bool = True,
+                    micro_steps: Optional[int] = None) -> Step:
+    if q_chunk is None:
+        q_chunk = _q_chunk(shape.seq_len)
+    if micro_steps is None:
+        micro_steps = cfg.micro_steps
+    while shape.global_batch % micro_steps:
+        micro_steps //= 2          # smoke shapes: clamp to a divisor
+    micro_steps = max(1, micro_steps)
+
+    def loss_fn(params, batch):
+        with shd.step_context(mesh, cfg):
+            hidden, _, aux = tf.forward(
+                params, cfg, batch["tokens"], patches=batch.get("patches"),
+                frames=batch.get("frames"), mode="train", q_chunk=q_chunk,
+                unroll=unroll, scan=scan)
+            loss = tf.ce_loss(params, cfg, hidden, batch["labels"],
+                              unroll=unroll)
+        total = loss + AUX_LOSS_WEIGHT * aux[0]
+        return total, {"loss": loss, "moe_aux": aux[0], "moe_drop": aux[1]}
+
+    def train_step(params, opt, batch):
+        if micro_steps == 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            # gradient accumulation: microbatch scan bounds the live
+            # activation set to one microbatch (grads accumulate in f32)
+            mb = jax.tree.map(
+                lambda x: x.reshape((micro_steps, x.shape[0] // micro_steps)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": 0.0, "moe_aux": 0.0, "moe_drop": 0.0}
+
+            def body(carry, micro):
+                gsum, msum = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, micro)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                msum = jax.tree.map(lambda a, b: a + b / micro_steps, msum, m)
+                return (gsum, msum), None
+
+            (grads, metrics), _ = jax.lax.scan(body, (g0, m0), mb)
+            grads = jax.tree.map(lambda g: g / micro_steps, grads)
+        params, opt, opt_metrics = adamw_update(params, grads, opt, acfg)
+        metrics.update(opt_metrics)
+        return params, opt, metrics
+
+    p_specs = param_specs(cfg, dtype)
+    o_specs = jax.eval_shape(init_adamw, p_specs)
+    b_specs = batch_specs(cfg, shape, dtype)
+
+    p_sh = shd.param_shardings(p_specs, mesh, cfg)
+    o_sh = {"master": shd.opt_shardings(p_sh, p_specs, mesh),
+            "m": shd.opt_shardings(p_sh, p_specs, mesh),
+            "v": shd.opt_shardings(p_sh, p_specs, mesh),
+            "count": _replicated(mesh)}
+    b_sh = shd.batch_shardings(b_specs, mesh, cfg)
+    metric_sh = jax.tree.map(lambda _: _replicated(mesh),
+                             {"loss": 0, "moe_aux": 0, "moe_drop": 0,
+                              "grad_norm": 0, "lr": 0})
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_sh, o_sh, b_sh),
+                 out_shardings=(p_sh, o_sh, metric_sh),
+                 donate_argnums=(0, 1) if donate else ())
+    return Step(fn=fn, args=(p_specs, o_specs, b_specs),
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, metric_sh),
+                meta={"q_chunk": q_chunk, "dtype": dtype, "kind": "train"})
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                      dtype=jnp.bfloat16, scan: bool = True,
+                      unroll: bool = False, cache_len: Optional[int] = None,
+                      q_chunk: Optional[int] = None) -> Step:
+    if q_chunk is None:
+        q_chunk = _q_chunk(shape.seq_len)
+    if cache_len is None:
+        cache_len = shape.seq_len
+
+    def prefill_step(params, batch):
+        with shd.step_context(mesh, cfg):
+            hidden, caches, _ = tf.forward(
+                params, cfg, batch["tokens"], patches=batch.get("patches"),
+                frames=batch.get("frames"), mode="prefill",
+                cache_len=cache_len, q_chunk=q_chunk, unroll=unroll, scan=scan)
+            logits = tf.logits_last(params, cfg, hidden)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    p_specs = param_specs(cfg, dtype)
+    b_specs = batch_specs(cfg, shape, dtype)
+    c_specs = cache_specs(cfg, shape.global_batch, cache_len, dtype)
+
+    p_sh = shd.param_shardings(p_specs, mesh, cfg)
+    b_sh = shd.batch_shardings(b_specs, mesh, cfg)
+    c_sh = shd.cache_shardings(c_specs, mesh, cfg)
+    tok_sh = NamedSharding(mesh, shd.batch_pspec((shape.global_batch,), mesh, cfg))
+
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                 out_shardings=(tok_sh, c_sh))
+    return Step(fn=fn, args=(p_specs, b_specs),
+                in_shardings=(p_sh, b_sh), out_shardings=(tok_sh, c_sh),
+                meta={"q_chunk": q_chunk, "dtype": dtype, "kind": "prefill",
+                      "cache_len": cache_len})
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                     dtype=jnp.bfloat16, scan: bool = True,
+                     unroll: bool = False, donate: bool = True) -> Step:
+    """serve_step: one new token against a seq_len-deep cache."""
+    b = shape.global_batch
+    cache_len = shape.seq_len
+
+    def decode_step(params, caches, tokens):
+        with shd.step_context(mesh, cfg):
+            hidden, caches, _ = tf.forward(params, cfg, tokens, mode="decode",
+                                           caches=caches, scan=scan,
+                                           unroll=unroll)
+            logits = tf.logits_last(params, cfg, hidden)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    p_specs = param_specs(cfg, dtype)
+    c_specs = cache_specs(cfg, b, cache_len, dtype)
+    t_specs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    p_sh = shd.param_shardings(p_specs, mesh, cfg)
+    c_sh = shd.cache_shardings(c_specs, mesh, cfg)
+    t_sh = NamedSharding(mesh, shd.batch_pspec((b, 1), mesh, cfg))
+    tok_sh = NamedSharding(mesh, shd.batch_pspec((b,), mesh, cfg))
+
+    fn = jax.jit(decode_step, in_shardings=(p_sh, c_sh, t_sh),
+                 out_shardings=(tok_sh, c_sh),
+                 donate_argnums=(1,) if donate else ())
+    return Step(fn=fn, args=(p_specs, c_specs, t_specs),
+                in_shardings=(p_sh, c_sh, t_sh), out_shardings=(tok_sh, c_sh),
+                meta={"dtype": dtype, "kind": "decode", "cache_len": cache_len})
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, **kw) -> Step:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape, **kw)
+    return make_decode_step(cfg, mesh, shape, **kw)

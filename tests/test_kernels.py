@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# minmax relaxation kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,u,v", [
+    (1, 8, 16), (4, 50, 70), (8, 128, 256), (3, 200, 130),
+    (16, 256, 512), (9, 131, 257), (2, 1, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_minmax_relax_shapes(s, u, v, dtype):
+    rng = np.random.default_rng(s * 1000 + u + v)
+    if dtype == jnp.int32:
+        prop = rng.integers(-1, u + 1, size=(s, u)).astype(np.int32)
+        inf = np.iinfo(np.int32).max
+    else:
+        prop = rng.standard_normal((s, u)).astype(np.float32)
+        inf = np.inf
+    prop[rng.random((s, u)) < 0.3] = inf
+    adj = (rng.random((u, v)) < 0.15).astype(np.uint8)
+    out = ops.minmax_relax(jnp.asarray(prop), jnp.asarray(adj))
+    ref = ops.minmax_relax_ref(jnp.asarray(prop), jnp.asarray(adj))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 128), (8, 16, 128), (16, 128, 256)])
+def test_minmax_relax_block_shape_invariance(blocks):
+    bs, bu, bv = blocks
+    rng = np.random.default_rng(0)
+    prop = rng.integers(0, 100, size=(10, 70)).astype(np.int32)
+    adj = (rng.random((70, 90)) < 0.2).astype(np.uint8)
+    out = ops.minmax_relax(jnp.asarray(prop), jnp.asarray(adj),
+                           block_s=bs, block_u=bu, block_v=bv)
+    ref = ops.minmax_relax_ref(jnp.asarray(prop), jnp.asarray(adj))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_minmax_relax_empty_adjacency_gives_inf():
+    prop = jnp.zeros((4, 32), jnp.int32)
+    adj = jnp.zeros((32, 64), jnp.uint8)
+    out = ops.minmax_relax(prop, adj)
+    assert int(out.min()) == np.iinfo(np.int32).max
+
+
+@given(st.integers(1, 12), st.integers(1, 64), st.integers(1, 64),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_minmax_relax_property(s, u, v, seed):
+    rng = np.random.default_rng(seed)
+    prop = rng.integers(-1, 2 * u, size=(s, u)).astype(np.int32)
+    adj = (rng.random((u, v)) < rng.uniform(0, 0.5)).astype(np.uint8)
+    out = ops.minmax_relax(jnp.asarray(prop), jnp.asarray(adj))
+    ref = ops.minmax_relax_ref(jnp.asarray(prop), jnp.asarray(adj))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,t,d", [
+    (1, 1, 8, 8, 16), (1, 2, 16, 16, 32), (2, 2, 64, 64, 64),
+    (1, 1, 8, 32, 16),      # decode-style: queries are the last 8 of 32
+    (1, 1, 1, 40, 64),      # single-token decode
+    (1, 2, 24, 24, 48),     # non-power-of-two d
+])
+def test_flash_attention_shapes(b, h, s, t, d):
+    rng = np.random.default_rng(b + h + s + t + d)
+    q = rng.standard_normal((b, h, s, d)).astype(np.float32)
+    k = rng.standard_normal((b, h, t, d)).astype(np.float32)
+    v = rng.standard_normal((b, h, t, d)).astype(np.float32)
+    out = ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=True, block_q=8, block_k=16)
+    ref = ops.flash_attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                                  causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 2, 32, 64)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 64)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 64)), dtype)
+    out = ops.flash_attention(q, k, v, block_q=8, block_k=16)
+    ref = ops.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+    assert out.dtype == dtype
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((1, 1, 16, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 48, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 48, 32)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=8, block_k=16)
+    ref = ops.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
