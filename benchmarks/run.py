@@ -9,6 +9,7 @@ Paper-figure map:
   concurrency  -> Fig 12  (throughput vs #C)
   speedup      -> Fig 10  (GSoFa vs sequential fill2 baseline)
   space        -> Figs 13/14/16 + Tables II/III (memory management)
+  supernode    -> §"supernode detection" (streamed fingerprints vs post-pass)
   roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 """
 from __future__ import annotations
@@ -24,13 +25,15 @@ def main() -> None:
     only = set(filter(None, args.only.split(",")))
 
     from benchmarks import (bench_balance, bench_concurrency, bench_space,
-                            bench_speedup, bench_workload, roofline)
+                            bench_speedup, bench_supernode, bench_workload,
+                            roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
         ("concurrency", bench_concurrency.main),
         ("speedup", bench_speedup.main),
         ("space", bench_space.main),
+        ("supernode", bench_supernode.main),
         ("roofline", roofline.main),
     ]
     for name, fn in suites:

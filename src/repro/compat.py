@@ -1,0 +1,35 @@
+"""Version compat for the pinned jax (0.4.x vs >= 0.5 API moves).
+
+Single home for every cross-version branch so a future jax bump deletes them
+in one place (ROADMAP "Open items"):
+
+* ``shard_map``      — moved from jax.experimental.shard_map to the jax top
+                       level; ``check_rep`` was renamed ``check_vma``.
+* ``axis_size``      — ``jax.lax.axis_size`` did not exist; the classic
+                       spelling is ``lax.psum(1, axis)`` (static when the
+                       mesh is concrete).
+* mesh construction  — ``jax.sharding.AxisType`` and the ``axis_types=``
+                       kwarg of make_mesh/AbstractMesh are post-0.4.x; on
+                       older jax every axis is implicitly Auto, so the
+                       builders drop the argument (see launch/mesh.py
+                       compat_make_mesh / compat_abstract_mesh).
+"""
+from __future__ import annotations
+
+import jax
+
+AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    SHARD_MAP_NOCHECK_KW = {"check_vma": False}
+else:  # pragma: no cover - depends on the pinned jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+    SHARD_MAP_NOCHECK_KW = {"check_rep": False}
+
+
+def axis_size(axis_name: str):
+    """Size of a mapped mesh axis, callable inside shard_map on any jax."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

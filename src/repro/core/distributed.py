@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import SHARD_MAP_NOCHECK_KW, shard_map
 from repro.core.gsofa import (
     SymbolicGraph, fill_masks, fixpoint_impl, init_labels, row_counts,
 )
@@ -83,13 +84,14 @@ def make_distributed_counts(mesh: Mesh, graph_n: int, *, backend: str = "ell",
     spec_rep = P()
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(spec_src, spec_rep),
         out_specs=(spec_src, spec_src, spec_src, P(axes)),
         # the while_loop carry mixes device-varying labels with replicated
         # scalars (trip counts differ per device by design) — disable the
-        # varying-manual-axes check rather than pcast every carry leaf
-        check_vma=False,
+        # varying-manual-axes (check_rep on older jax) check rather than
+        # pcast every carry leaf
+        **SHARD_MAP_NOCHECK_KW,
     )
     def body(srcs_mat, graph):
         return _local_body(srcs_mat, graph, max_iters, backend)

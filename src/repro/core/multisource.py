@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, List, Optional
+from typing import Callable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -116,8 +116,17 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
                     bubble: bool = False, use_arena: bool = True,
                     budget_bytes: Optional[int] = None,
                     sources: Optional[np.ndarray] = None,
-                    collect_masks: bool = False) -> MultiSourceResult:
-    """Single-device multi-source driver: plan chunks, run fixpoints, aggregate."""
+                    collect_masks: bool = False,
+                    on_chunk: Optional[Callable] = None) -> MultiSourceResult:
+    """Single-device multi-source driver: plan chunks, run fixpoints, aggregate.
+
+    ``on_chunk(labels, srcs, offset)`` is invoked with every converged label
+    matrix before it is recycled — labels is the (G, W) device array (W < n
+    for bubble chunks), srcs the matching source ids (repeats possible from
+    padding), offset the label-window base.  This is how supernode
+    fingerprinting (repro.supernodes) overlaps detection with the symbolic
+    chunks instead of gathering the dense pattern afterwards.
+    """
     n = graph.n
     concurrency = auto_concurrency(graph, budget_bytes, concurrency, backend)
     if not combined:
@@ -154,6 +163,7 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
         for g in groups:
             gs = srcs[jnp.asarray(g)]
             if bubble and chunk.width < n:
+                offset = 0
                 view = _chunk_view(graph, chunk.width)
                 nbrs = graph.out_ell[gs]
                 labels0 = init_labels(view, gs, nbrs=nbrs)
@@ -179,6 +189,8 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
                     mask = fill_masks(res.labels, gs, offset)
                 l_cnt, u_cnt = row_counts(res.labels, gs, offset)
 
+            if on_chunk is not None:
+                on_chunk(res.labels, chunk.srcs[np.asarray(g)], offset)
             real = np.asarray(g) < chunk.n_real
             real_idx = chunk.srcs[np.asarray(g)[real]]
             l_counts[real_idx] = np.asarray(l_cnt)[real]

@@ -33,6 +33,10 @@ class SymbolicResult:
     reinits: int
     elapsed_s: float
     memory_report: dict
+    # supernode partition (detect_supernodes=True; repro.supernodes pipeline)
+    supernodes: Optional[np.ndarray] = None   # (n_supernodes, 2) [start, end)
+    n_supernodes: int = 0
+    mean_supernode_size: float = 0.0
 
     @property
     def lu_nnz(self) -> int:
@@ -112,14 +116,34 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
                        bubble: bool = False, use_arena: bool = True,
                        budget_bytes: Optional[int] = None,
                        checkpoint_path: Optional[str] = None,
-                       graph: Optional[SymbolicGraph] = None) -> SymbolicResult:
+                       graph: Optional[SymbolicGraph] = None,
+                       detect_supernodes: bool = False,
+                       supernode_relax: int = 0,
+                       supernode_max_size: int = 64) -> SymbolicResult:
     """Compute the L/U nonzero structure of ``a`` (single host; for multi-device
-    use core.distributed / runtime.scheduler)."""
+    use core.distributed / runtime.scheduler).
+
+    With ``detect_supernodes=True`` the supernode partition rides along for
+    free: per-chunk converged label matrices are folded into O(n) column
+    fingerprints as they stream out of the fixpoint (repro.supernodes,
+    DESIGN.md §3) — no dense pattern is ever gathered — and the result gains
+    ``supernodes`` / ``n_supernodes`` / ``mean_supernode_size``.
+    ``supernode_relax`` is the T3 merge tolerance (0 = exact T2);
+    ``supernode_max_size`` caps panel width like the serial post-pass.
+    """
     t0 = time.perf_counter()
     if graph is None:
         dense_block = 128 if backend in ("dense", "kernel") else None
         graph = prepare_graph(a, dense_block=dense_block)
     eff_c = auto_concurrency(graph, budget_bytes, concurrency, backend)
+
+    fp = None
+    on_chunk = None
+    if detect_supernodes:
+        from repro.supernodes import ColumnFingerprints
+
+        fp = ColumnFingerprints(n=a.n)
+        on_chunk = fp.update
 
     ckpt = ChunkCheckpointer(checkpoint_path, a.n) if checkpoint_path else None
     if ckpt is not None and ckpt.done:
@@ -133,7 +157,8 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
             srcs = np.arange(start, min(start + eff_c, a.n), dtype=np.int32)
             res = run_multisource(graph, concurrency=eff_c, backend=backend,
                                   combined=combined, bubble=bubble,
-                                  use_arena=use_arena, sources=srcs)
+                                  use_arena=use_arena, sources=srcs,
+                                  on_chunk=on_chunk)
             l_counts[srcs] = res.l_counts[srcs]
             u_counts[srcs] = res.u_counts[srcs]
             supersteps += res.supersteps
@@ -147,11 +172,32 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
     else:
         ms = run_multisource(graph, concurrency=eff_c, backend=backend,
                              combined=combined, bubble=bubble,
-                             use_arena=use_arena, budget_bytes=budget_bytes)
+                             use_arena=use_arena, budget_bytes=budget_bytes,
+                             on_chunk=on_chunk)
         if ckpt is not None:
             for start in range(0, a.n, eff_c):
                 srcs = np.arange(start, min(start + eff_c, a.n), dtype=np.int64)
                 ckpt.record(start, srcs, ms.l_counts[srcs], ms.u_counts[srcs])
+
+    sn_ranges = None
+    sn_count = 0
+    sn_mean = 0.0
+    if fp is not None:
+        if not fp.complete:
+            # checkpoint restart restored some chunks' counts without their
+            # label matrices; re-run those sources fingerprint-only
+            missing = np.flatnonzero(~fp.seen).astype(np.int32)
+            run_multisource(graph, concurrency=eff_c, backend=backend,
+                            combined=combined, bubble=bubble,
+                            use_arena=use_arena, sources=missing,
+                            on_chunk=fp.update)
+        from repro.supernodes import detect_from_fingerprints, supernode_stats
+
+        sn_ranges = detect_from_fingerprints(
+            fp, relax=supernode_relax, max_size=supernode_max_size)
+        stats = supernode_stats(sn_ranges)
+        sn_count = stats["n_supernodes"]
+        sn_mean = stats["mean_size"]
 
     nnz_offdiag = sum(int(np.sum(a.row(i) != i)) for i in range(a.n))
     lu_offdiag = int(ms.l_counts.sum() + ms.u_counts.sum())
@@ -162,4 +208,6 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         concurrency=ms.concurrency, supersteps=ms.supersteps, reinits=ms.reinits,
         elapsed_s=time.perf_counter() - t0,
         memory_report=aux_memory_report(graph, ms.concurrency, backend),
+        supernodes=sn_ranges, n_supernodes=sn_count,
+        mean_supernode_size=sn_mean,
     )

@@ -1,6 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles.
 
 * ``gsofa_relax`` — bottleneck-semiring relaxation, the GSoFa hot spot.
+* ``supernode_fp`` — per-column supernode fingerprints from label chunks.
 * ``flash_attention`` — blocked online-softmax attention for the LM substrate.
 """
 from repro.kernels import ops, ref

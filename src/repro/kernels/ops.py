@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.gsofa_relax import minmax_relax_pallas
+from repro.kernels.supernode_fp import supernode_fp_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
 
@@ -50,6 +51,38 @@ def minmax_relax(prop: jax.Array, adj: jax.Array, *, block_s: int = 8,
 
 def minmax_relax_ref(prop: jax.Array, adj: jax.Array) -> jax.Array:
     return _ref.minmax_relax_ref(prop, adj)
+
+
+def column_fingerprints(rel: jax.Array, src: jax.Array, m1: jax.Array,
+                        m2: jax.Array, valid: jax.Array, *, block_s: int = 8,
+                        block_v: int = 512,
+                        interpret: bool | None = None) -> jax.Array:
+    """(3, V) per-column supernode fingerprints; see supernode_fp.py.
+
+    Pads the source axis to ``block_s`` (invalid rows) and the vertex axis to
+    ``block_v`` (labels clamped high so padded columns read as empty), packs
+    the per-source lanes into the (8, S) meta layout, and slices back.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    s, v = rel.shape
+    block_v = min(block_v, max(128, ((v + 127) // 128) * 128))
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    rel_p = _pad_to(_pad_to(rel, 0, block_s, big), 1, block_v, big)
+    sp = rel_p.shape[0]
+    meta = jnp.zeros((8, sp), dtype=jnp.int32)
+    meta = meta.at[0, :s].set(src.astype(jnp.int32))
+    meta = meta.at[1, :s].set(m1.astype(jnp.int32))
+    meta = meta.at[2, :s].set(m2.astype(jnp.int32))
+    meta = meta.at[3, :s].set(valid.astype(jnp.int32))
+    out = supernode_fp_pallas(rel_p, meta, block_s=block_s, block_v=block_v,
+                              interpret=interpret)
+    return out[:3, :v]
+
+
+def column_fingerprints_ref(rel: jax.Array, src: jax.Array, m1: jax.Array,
+                            m2: jax.Array, valid: jax.Array) -> jax.Array:
+    return _ref.supernode_fp_ref(rel, src, m1, m2, valid)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -28,6 +28,29 @@ def minmax_relax_ref(prop: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(masked, axis=1)
 
 
+def supernode_fp_ref(rel: jnp.ndarray, src: jnp.ndarray, m1: jnp.ndarray,
+                     m2: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Column-fingerprint oracle for kernels/supernode_fp.py (DESIGN.md §3).
+
+    rel:   (S, V) int32 relative labels: maxId, or > V for invalid/stale.
+    src:   (S,) int32 source (= filled-pattern row) ids.
+    m1/m2: (S,) int32 row hashes mix1(src) / mix2(src).
+    valid: (S,) int32/bool, 0 for batch-padding rows.
+
+    Returns (3, V) int32: row 0 = strictly-below-diagonal count of each
+    column of L, row 1 = wrapping sum of m1 over those rows, row 2 = xor of
+    m2 over those rows.
+    """
+    v_ids = jnp.arange(rel.shape[1], dtype=jnp.int32)
+    mask = ((rel < v_ids[None, :])
+            & (src[:, None] > v_ids[None, :])
+            & (valid[:, None] != 0))
+    cnt = jnp.sum(mask.astype(jnp.int32), axis=0)
+    hsum = jnp.sum(jnp.where(mask, m1[:, None], 0), axis=0)
+    hxor = jnp.bitwise_xor.reduce(jnp.where(mask, m2[:, None], 0), axis=0)
+    return jnp.stack([cnt, hsum, hxor])
+
+
 def mamba_scan_ref(x, dt, b_t, c_t, a, d_skip):
     """Sequential-scan oracle of kernels/ssm_scan.mamba_scan (pure jnp)."""
     import jax

@@ -18,19 +18,39 @@ GSoFa shards *sources* over every axis flattened (paper's interleave, §V).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+# jax.sharding.AxisType landed after 0.4.x; on older jax every axis is
+# implicitly Auto, so the compat builders below simply drop the argument.
+from repro.compat import AXIS_TYPE as _AXIS_TYPE
+
+
+def compat_make_mesh(axis_shapes: tuple, axis_names: tuple) -> Mesh:
+    """jax.make_mesh with Auto axis types across jax versions."""
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(_AXIS_TYPE.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def compat_abstract_mesh(axis_shapes: tuple, axis_names: tuple):
+    """AbstractMesh (device-less) with Auto axis types across jax versions."""
+    from jax.sharding import AbstractMesh
+
+    if _AXIS_TYPE is not None:
+        return AbstractMesh(axis_shapes, axis_names,
+                            axis_types=(_AXIS_TYPE.Auto,) * len(axis_names))
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
     """Mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat_make_mesh((n // model, model), ("data", "model"))

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.train.compress import dequantize, quantize
 
 
@@ -36,7 +37,7 @@ def _ring_allreduce_local(x: jax.Array, axis_name: str, *,
     x: (n*chunk,) flat per-device values (same logical tensor everywhere);
     returns the all-reduced tensor.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     if n == 1:
         return x
@@ -92,7 +93,7 @@ def make_ring_allreduce(mesh: Mesh, axis: str, *, compress: bool = False):
     n = mesh.shape[axis]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=P(axis, None), out_specs=P(axis, None))
     def body(x_local):                       # (1, k) on each device
         flat = x_local.reshape(-1)

@@ -1,0 +1,29 @@
+"""SIMT-friendly supernode detection (paper §"supernode detection").
+
+Pipeline: core/multisource.py streams per-chunk converged label matrices ->
+fingerprint.py folds them into O(n) per-column fingerprints (Pallas kernel
+kernels/supernode_fp.py on TPU) -> detect.py runs the vectorized T2/T3
+boundary tests -> balance.py packs the resulting supernodes into
+near-equal-nnz panels for numeric consumers and multi-device merge.
+
+The serial dense post-pass (core/symbolic.detect_supernodes) survives as the
+test oracle; ``symbolic_factorize(..., detect_supernodes=True)`` is the
+integrated entry point.
+"""
+from repro.supernodes.fingerprint import (
+    ColumnFingerprints, fingerprints_from_graph, mix1, mix2,
+)
+from repro.supernodes.detect import (
+    detect_from_fingerprints, detect_supernodes_batched, merge_flags,
+    ranges_from_flags, supernode_stats,
+)
+from repro.supernodes.balance import (
+    PanelPartition, pack_panels, supernode_weights,
+)
+
+__all__ = [
+    "ColumnFingerprints", "fingerprints_from_graph", "mix1", "mix2",
+    "detect_from_fingerprints", "detect_supernodes_batched", "merge_flags",
+    "ranges_from_flags", "supernode_stats",
+    "PanelPartition", "pack_panels", "supernode_weights",
+]

@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops
 
@@ -59,6 +59,55 @@ def test_minmax_relax_property(s, u, v, seed):
     adj = (rng.random((u, v)) < rng.uniform(0, 0.5)).astype(np.uint8)
     out = ops.minmax_relax(jnp.asarray(prop), jnp.asarray(adj))
     ref = ops.minmax_relax_ref(jnp.asarray(prop), jnp.asarray(adj))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# supernode fingerprint kernel
+# ---------------------------------------------------------------------------
+
+def _fp_inputs(s, v, seed):
+    rng = np.random.default_rng(seed)
+    rel = rng.integers(-1, v + 2, size=(s, v)).astype(np.int32)
+    src = rng.integers(0, v, size=s).astype(np.int32)
+    m1 = rng.integers(0, 2**32, size=s, dtype=np.uint64).astype(np.uint32)
+    m2 = rng.integers(0, 2**32, size=s, dtype=np.uint64).astype(np.uint32)
+    valid = (rng.random(s) < 0.8).astype(np.int32)
+    return tuple(jnp.asarray(x) for x in
+                 (rel, src, m1.view(np.int32), m2.view(np.int32), valid))
+
+
+@pytest.mark.parametrize("s,v", [
+    (1, 1), (5, 100), (8, 512), (13, 300), (16, 1024), (33, 700),
+])
+def test_supernode_fp_shapes(s, v):
+    args = _fp_inputs(s, v, seed=s * 101 + v)
+    out = ops.column_fingerprints(*args)
+    ref = ops.column_fingerprints_ref(*args)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("block_v", [128, 256, 512])
+def test_supernode_fp_block_shape_invariance(block_v):
+    args = _fp_inputs(20, 600, seed=0)
+    out = ops.column_fingerprints(*args, block_v=block_v)
+    ref = ops.column_fingerprints_ref(*args)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_supernode_fp_invalid_rows_contribute_nothing():
+    rel, src, m1, m2, _ = _fp_inputs(9, 200, seed=3)
+    none = ops.column_fingerprints(rel, src, m1, m2,
+                                   jnp.zeros(9, jnp.int32))
+    assert int(jnp.abs(none).max()) == 0
+
+
+@given(st.integers(1, 24), st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_supernode_fp_property(s, v, seed):
+    args = _fp_inputs(s, v, seed)
+    out = ops.column_fingerprints(*args)
+    ref = ops.column_fingerprints_ref(*args)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 

@@ -25,7 +25,8 @@ out = {}
 
 # --- ring all-reduce ---
 from repro.runtime.collectives import make_ring_allreduce
-mesh1 = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh1 = compat_make_mesh((8,), ("x",))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 500)), jnp.float32)
 want = np.asarray(x).sum(0)
 got = np.asarray(make_ring_allreduce(mesh1, "x")(x))

@@ -6,7 +6,7 @@ import math
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_config
@@ -17,8 +17,8 @@ from repro.train.steps import param_specs
 @pytest.fixture(scope="module")
 def mesh():
     # host has 1 device: an abstract mesh stands in for the 16x16 pod
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"),
-                                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_abstract_mesh
+    return compat_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _canon(spec):

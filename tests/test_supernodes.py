@@ -1,0 +1,263 @@
+"""Supernode detection subsystem (repro.supernodes) vs the serial oracle.
+
+The serial dense post-pass core/symbolic.detect_supernodes is the ground
+truth; the batched fingerprint pipeline must reproduce it exactly at relax=0
+on every matrix family, through every multisource variant (arena windows,
+bubble-removal truncation, chunking), and through both fingerprint backends
+(jnp oracle and the Pallas kernel).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.gsofa import dense_pattern, prepare_graph
+from repro.core.multisource import run_multisource
+from repro.core.symbolic import detect_supernodes, symbolic_factorize
+from repro.sparse import (
+    banded_random, chemical_like, circuit_like, economic_like,
+    grid2d_laplacian, grid3d_laplacian, permute_csr, random_pattern, rcm_order,
+)
+from repro.supernodes import (
+    ColumnFingerprints, detect_from_fingerprints, detect_supernodes_batched,
+    fingerprints_from_graph, merge_flags, pack_panels, ranges_from_flags,
+    supernode_stats, supernode_weights,
+)
+
+MATS = {
+    "grid2d": lambda: permute_csr(grid2d_laplacian(12),
+                                  rcm_order(grid2d_laplacian(12))),
+    "grid3d": lambda: grid3d_laplacian(5),
+    "circuit": lambda: circuit_like(150, seed=7),
+    "economic": lambda: economic_like(96, block=12, seed=2),
+    "chemical": lambda: chemical_like(128, stage=16, seed=3),
+    "banded": lambda: banded_random(100, band=6, seed=4),
+    "random": lambda: random_pattern(80, density=0.05, seed=5),
+    "random_sym": lambda: random_pattern(64, density=0.05, symmetric=True,
+                                         seed=6),
+}
+
+
+def _serial(a, max_size=64):
+    return detect_supernodes(dense_pattern(prepare_graph(a)),
+                             max_size=max_size)
+
+
+# ---------------------------------------------------------------------------
+# parity with the serial dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(MATS))
+def test_batched_matches_serial(name):
+    a = MATS[name]()
+    got = detect_supernodes_batched(a, max_size=64, fp_backend="ref")
+    assert np.array_equal(got, _serial(a))
+
+
+@pytest.mark.parametrize("name", ["grid2d", "circuit", "random"])
+def test_pallas_fingerprints_match_serial(name):
+    a = MATS[name]()
+    got = detect_supernodes_batched(a, max_size=64, fp_backend="kernel")
+    assert np.array_equal(got, _serial(a))
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(),
+    dict(bubble=True),
+    dict(use_arena=False),
+    dict(combined=False),
+])
+def test_symbolic_factorize_integration(kwargs):
+    """detect_supernodes=True rides along every multisource variant."""
+    a = MATS["circuit"]()
+    ref = _serial(a)
+    r = symbolic_factorize(a, concurrency=48, detect_supernodes=True, **kwargs)
+    assert np.array_equal(r.supernodes, ref)
+    assert r.n_supernodes == len(ref)
+    assert r.mean_supernode_size == pytest.approx(a.n / len(ref))
+
+
+def test_symbolic_factorize_default_has_no_supernodes():
+    a = MATS["random"]()
+    r = symbolic_factorize(a, concurrency=32)
+    assert r.supernodes is None and r.n_supernodes == 0
+
+
+def test_checkpoint_restart_still_detects(tmp_path):
+    """Restart path: restored chunks re-fingerprint without dense gather."""
+    a = MATS["economic"]()
+    ref = _serial(a)
+    path = os.path.join(tmp_path, "ckpt.jsonl")
+    symbolic_factorize(a, concurrency=32, checkpoint_path=path)
+    r = symbolic_factorize(a, concurrency=32, checkpoint_path=path,
+                           detect_supernodes=True)
+    assert np.array_equal(r.supernodes, ref)
+
+
+def test_chunking_invariance():
+    """Fingerprints (hence ranges) are independent of #C chunking."""
+    a = MATS["chemical"]()
+    ref = detect_supernodes_batched(a, concurrency=128, fp_backend="ref")
+    for c in (1, 7, 32):
+        got = detect_supernodes_batched(a, concurrency=c, fp_backend="ref")
+        assert np.array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint accumulator mechanics
+# ---------------------------------------------------------------------------
+
+def test_update_is_idempotent_and_merge_matches_full():
+    a = MATS["circuit"]()
+    g = prepare_graph(a)
+    full = fingerprints_from_graph(g, fp_backend="ref")
+
+    # two shards over disjoint interleaved source sets, merged
+    lo = ColumnFingerprints(n=a.n, backend="ref")
+    hi = ColumnFingerprints(n=a.n, backend="ref")
+    run_multisource(g, concurrency=32,
+                    sources=np.arange(0, a.n, 2, dtype=np.int32),
+                    on_chunk=lo.update)
+    run_multisource(g, concurrency=32,
+                    sources=np.arange(1, a.n, 2, dtype=np.int32),
+                    on_chunk=hi.update)
+    # re-delivering a shard's rows is a no-op (chunk padding / replay)
+    run_multisource(g, concurrency=32,
+                    sources=np.arange(0, a.n, 2, dtype=np.int32),
+                    on_chunk=lo.update)
+    lo.merge(hi)
+    assert lo.complete
+    assert np.array_equal(lo.counts, full.counts)
+    assert np.array_equal(lo.hsum, full.hsum)
+    assert np.array_equal(lo.hxor, full.hxor)
+    assert np.array_equal(lo.subdiag, full.subdiag)
+
+
+def test_merge_rejects_overlapping_shards():
+    x = ColumnFingerprints(n=8)
+    y = ColumnFingerprints(n=8)
+    x.seen[3] = True
+    y.seen[3] = True
+    with pytest.raises(ValueError):
+        x.merge(y)
+
+
+def test_incomplete_fingerprints_refuse_detection():
+    fp = ColumnFingerprints(n=16)
+    with pytest.raises(ValueError):
+        merge_flags(fp)
+
+
+def test_counts_match_pattern_columns():
+    """Fingerprint counts are the below-diagonal column counts of L."""
+    a = MATS["random"]()
+    fp = fingerprints_from_graph(prepare_graph(a), fp_backend="ref")
+    pat = dense_pattern(prepare_graph(a))
+    ids = np.arange(a.n)
+    ref_counts = (pat & (ids[:, None] > ids[None, :])).sum(axis=0)
+    assert np.array_equal(fp.counts, ref_counts)
+
+
+# ---------------------------------------------------------------------------
+# T3 relaxation & range assembly
+# ---------------------------------------------------------------------------
+
+def test_relax_monotonicity():
+    """Larger relax => merge set grows => fewer, larger supernodes."""
+    a = MATS["grid2d"]()
+    fp = fingerprints_from_graph(prepare_graph(a), fp_backend="ref")
+    prev = None
+    for relax in (0, 1, 2, 4, 8):
+        ranges = detect_from_fingerprints(fp, relax=relax, max_size=a.n)
+        sizes = ranges[:, 1] - ranges[:, 0]
+        assert ranges[0, 0] == 0 and ranges[-1, 1] == a.n
+        assert (ranges[1:, 0] == ranges[:-1, 1]).all()
+        if prev is not None:
+            assert len(ranges) <= prev
+        prev = len(ranges)
+    # relaxation must actually fire on a grid (T2 alone is near-diagonal)
+    assert len(detect_from_fingerprints(fp, relax=8, max_size=a.n)) < \
+        len(detect_from_fingerprints(fp, relax=0, max_size=a.n))
+
+
+def test_relax_zero_is_exact_t2():
+    a = MATS["banded"]()
+    fp = fingerprints_from_graph(prepare_graph(a), fp_backend="ref")
+    assert np.array_equal(detect_from_fingerprints(fp, relax=0, max_size=64),
+                          _serial(a, max_size=64))
+
+
+@pytest.mark.parametrize("max_size", [1, 2, 5, 64])
+def test_max_size_matches_serial(max_size):
+    a = MATS["circuit"]()
+    fp = fingerprints_from_graph(prepare_graph(a), fp_backend="ref")
+    got = detect_from_fingerprints(fp, max_size=max_size)
+    assert np.array_equal(got, _serial(a, max_size=max_size))
+    assert (got[:, 1] - got[:, 0]).max() <= max_size
+
+
+def test_ranges_from_flags_vectorized_splitting():
+    flags = np.zeros(10, dtype=bool)
+    flags[1:7] = True          # one 7-column run, then singletons
+    got = ranges_from_flags(flags, max_size=3)
+    assert got.tolist() == [[0, 3], [3, 6], [6, 7], [7, 8], [8, 9], [9, 10]]
+
+
+def test_supernode_stats():
+    s = supernode_stats(np.array([[0, 4], [4, 5], [5, 9]]))
+    assert s["n_supernodes"] == 3
+    assert s["mean_size"] == 3.0
+    assert s["max_size"] == 4
+
+
+# ---------------------------------------------------------------------------
+# balanced panel packing
+# ---------------------------------------------------------------------------
+
+def _fp_and_ranges(a, relax=2):
+    fp = fingerprints_from_graph(prepare_graph(a), fp_backend="ref")
+    return fp, detect_from_fingerprints(fp, relax=relax, max_size=64)
+
+
+def test_weights_are_panel_nnz():
+    a = MATS["grid2d"]()
+    fp, ranges = _fp_and_ranges(a)
+    w = supernode_weights(ranges, fp.counts)
+    pat = dense_pattern(prepare_graph(a))
+    ids = np.arange(a.n)
+    col_nnz = (pat & (ids[:, None] >= ids[None, :])).sum(axis=0)  # diag incl.
+    ref = np.array([col_nnz[s:e].sum() for s, e in ranges])
+    assert np.array_equal(w, ref)
+    assert w.sum() == col_nnz.sum()
+
+
+@pytest.mark.parametrize("n_panels", [2, 4, 8])
+def test_lpt_packing_quality_bound(n_panels):
+    """Greedy LPT guarantee: max load <= total/p + max single weight."""
+    a = MATS["grid2d"]()
+    fp, ranges = _fp_and_ranges(a)
+    part = pack_panels(ranges, fp.counts, n_panels)
+    w = supernode_weights(ranges, fp.counts)
+    assert part.loads.sum() == w.sum()
+    assert part.loads.max() <= w.sum() / n_panels + w.max()
+    assert part.balance_ratio >= 1.0
+    # every supernode assigned exactly once
+    assert sorted(np.concatenate(part.panels()).tolist()) == \
+        list(range(len(ranges)))
+
+
+def test_empty_packing_is_well_formed():
+    part = pack_panels(np.zeros((0, 2), np.int64), np.zeros(0, np.int64), 0)
+    assert part.n_panels == 0 and part.balance_ratio == 1.0
+    part = pack_panels(np.zeros((0, 2), np.int64), np.zeros(0, np.int64), 3)
+    assert part.loads.sum() == 0 and part.balance_ratio == 1.0
+
+
+def test_contiguous_packing_stays_contiguous():
+    a = MATS["circuit"]()
+    fp, ranges = _fp_and_ranges(a)
+    part = pack_panels(ranges, fp.counts, 4, policy="contiguous")
+    assert (np.diff(part.assignment) >= 0).all()      # order-preserving
+    assert part.loads.sum() == supernode_weights(ranges, fp.counts).sum()
+    w = supernode_weights(ranges, fp.counts)
+    assert part.loads.max() <= w.sum() / 4 + 2 * w.max()

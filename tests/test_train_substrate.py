@@ -14,8 +14,8 @@ from repro.train.steps import make_train_step
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_make_mesh
+    return compat_make_mesh((1, 1), ("data", "model"))
 
 
 def test_adamw_minimizes_quadratic():
