@@ -21,7 +21,7 @@ def save_artifact(name: str, payload: Dict) -> str:
 
 def load_datasets(codes: Iterable[str] | None = None):
     """Paper Table I analogues, reordered with RCM like the paper's ParMETIS
-    preprocessing step (ordering quality differs; see DESIGN.md §7)."""
+    preprocessing step (ordering quality differs; see DESIGN.md §8)."""
     from repro.sparse import paper_dataset_analogue, permute_csr, rcm_order
     from repro.sparse.matrices import PAPER_DATASETS
 

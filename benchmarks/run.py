@@ -10,11 +10,15 @@ Paper-figure map:
   speedup      -> Fig 10  (GSoFa vs sequential fill2 baseline)
   space        -> Figs 13/14/16 + Tables II/III (memory management)
   supernode    -> §"supernode detection" (streamed fingerprints vs post-pass)
+  numeric      -> DESIGN.md §4 (supernodal numeric LU vs column-at-a-time)
   roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
+
+Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 
@@ -24,9 +28,9 @@ def main() -> None:
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
-    from benchmarks import (bench_balance, bench_concurrency, bench_space,
-                            bench_speedup, bench_supernode, bench_workload,
-                            roofline)
+    from benchmarks import (bench_balance, bench_concurrency, bench_numeric,
+                            bench_space, bench_speedup, bench_supernode,
+                            bench_workload, roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
@@ -34,8 +38,10 @@ def main() -> None:
         ("speedup", bench_speedup.main),
         ("space", bench_space.main),
         ("supernode", bench_supernode.main),
+        ("numeric", bench_numeric.main),
         ("roofline", roofline.main),
     ]
+    failures = []
     for name, fn in suites:
         if only and name not in only:
             continue
@@ -45,7 +51,11 @@ def main() -> None:
             fn()
         except Exception as e:  # keep the suite running; report at the end
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            failures.append(name)
         print(f"[{name}] {time.time()-t0:.1f}s")
+    if failures:
+        print(f"\nFAILED suites: {', '.join(failures)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -4,19 +4,22 @@
 
 Generates a circuit-simulation-like sparse matrix (the paper's dominant
 application domain), reorders it (RCM), runs GSoFa symbolic factorization,
-and validates the predicted L/U structure two independent ways:
-sequential fill2 and an actual numeric LU restricted to the pattern.
+validates the predicted L/U structure two independent ways (sequential fill2
+and a numeric LU restricted to the pattern), then consumes the supernode
+panel partition in the supernodal numeric factorization — the full
+symbolic -> numeric sparse LU pipeline.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import numeric_factorize
 from repro.core.fill2 import fill2_all
 from repro.core.gsofa import dense_pattern, prepare_graph
 from repro.core.symbolic import symbolic_factorize
 from repro.sparse import circuit_like, permute_csr, rcm_order
-from repro.sparse.numeric import validate_symbolic
+from repro.sparse.numeric import generic_values, validate_symbolic
 
 
 def main() -> None:
@@ -50,6 +53,16 @@ def main() -> None:
     report = validate_symbolic(a, pattern)
     print(f"numeric LU within pattern: {'OK' if report['ok'] else 'FAIL'} "
           f"(missed {report['n_missed']}, spurious {report['n_spurious']})")
+
+    # 4. supernodal numeric factorization consuming the panel partition
+    values = generic_values(a)
+    num = numeric_factorize(a, res, values=values, pattern=pattern)
+    resid = np.abs(num.reconstruct() - values).max() / np.abs(values).max()
+    print(f"supernodal numeric LU: {num.n_supernodes} panels in "
+          f"{num.n_levels} dependency levels, {num.n_updates} panel updates "
+          f"({num.gemm_flops/1e6:.1f} MFLOP of GEMMs)")
+    print(f"|LU - A| / |A| = {resid:.2e}  "
+          f"(elapsed {num.elapsed_s*1e3:.0f} ms)")
 
 
 if __name__ == "__main__":

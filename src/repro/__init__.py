@@ -1,7 +1,33 @@
 """repro: GSoFa (scalable sparse symbolic LU factorization) as a JAX framework.
 
-Layers: core (the paper's algorithm), sparse (matrix substrate), kernels
+Layers: core (the paper's algorithm), sparse (matrix substrate), numeric
+(supernodal numeric LU consuming the symbolic panel partition), kernels
 (Pallas TPU), models/train/data/checkpoint/runtime (LM framework substrate),
 configs + launch (architectures, production mesh, dry-run drivers).
+
+The end-to-end sparse LU entry points are re-exported lazily::
+
+    from repro import symbolic_factorize, numeric_factorize
+    sym = symbolic_factorize(a, detect_supernodes=True)
+    num = numeric_factorize(a, sym)
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_LAZY_EXPORTS = {
+    "symbolic_factorize": "repro.core.symbolic",
+    "SymbolicResult": "repro.core.symbolic",
+    "numeric_factorize": "repro.numeric",
+    "NumericResult": "repro.numeric",
+    "ZeroPivotError": "repro.sparse.numeric",
+    "CSRMatrix": "repro.sparse",
+}
+
+__all__ = ["__version__", *_LAZY_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _LAZY_EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -2,7 +2,7 @@
 
 Each also has a ``reduced()`` smoke variant (tests/test_models_smoke.py) and is
 selectable via ``--arch <name>`` in the launch drivers.  Deviations from the
-upstream checkpoints are noted inline and in DESIGN.md §5/§7.
+upstream checkpoints are noted inline and in DESIGN.md §6/§8.
 """
 from repro.configs.base import (
     EncDecConfig, MLAConfig, ModelConfig, MoEConfig, SSMConfig, register,
@@ -81,7 +81,7 @@ moonshot_v1_16b = register(ModelConfig(
 ))
 
 # MLA + 1 shared + 256 routed top-8.  Deviations: MTP head omitted; the
-# first-3-dense-layers nuance folded into uniform MoE (DESIGN.md §7).
+# first-3-dense-layers nuance folded into uniform MoE (DESIGN.md §8).
 deepseek_v3_671b = register(ModelConfig(
     name="deepseek-v3-671b", family="moe",
     n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, d_ff=2048,

@@ -232,7 +232,7 @@ def all_configs() -> Dict[str, ModelConfig]:
 
 
 def cell_is_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """long_500k needs sub-quadratic attention (DESIGN.md §5 skip list)."""
+    """long_500k needs sub-quadratic attention (DESIGN.md §6 skip list)."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "full attention at 500k context (documented skip)"
     return True, ""

@@ -47,23 +47,35 @@ class ChunkCheckpointer:
     """Fault tolerance for long symbolic runs: per-chunk durable progress.
 
     The source space is embarrassingly parallel, so the natural checkpoint
-    unit is a completed source range; restart resumes the pending ranges
-    (a node failure loses at most one in-flight chunk).
+    unit is a completed *source range*; restart resumes whatever sources are
+    not covered by any record (a node failure loses at most one in-flight
+    chunk).  Coverage is tracked per source, not per chunk-grid start, so a
+    restart may use a different ``concurrency`` than the recording run —
+    pending work is re-chunked on the new grid.
     """
 
     def __init__(self, path: str, n: int):
         self.path = path
         self.n = n
-        self.done: dict[int, tuple] = {}
+        self.records: list[dict] = []
+        self.covered = np.zeros(n, dtype=bool)
+        self.done: dict[int, dict] = {}    # start -> latest rec (introspection)
         if os.path.exists(path):
             with open(path) as f:
                 for line in f:
                     rec = json.loads(line)
                     if rec["n"] == n:
-                        self.done[rec["start"]] = rec
+                        self._remember(rec)
 
-    def is_done(self, start: int) -> bool:
-        return start in self.done
+    def _remember(self, rec: dict) -> None:
+        self.records.append(rec)
+        self.covered[np.asarray(rec["srcs"], dtype=np.int64)] = True
+        self.done[rec["start"]] = rec
+
+    def pending_sources(self) -> np.ndarray:
+        """Sources not covered by any record, ready to be re-chunked on
+        whatever concurrency grid the restarting run uses."""
+        return np.flatnonzero(~self.covered).astype(np.int64)
 
     def record(self, start: int, srcs: np.ndarray, l_cnt: np.ndarray,
                u_cnt: np.ndarray) -> None:
@@ -73,16 +85,14 @@ class ChunkCheckpointer:
             f.write(json.dumps(rec) + "\n")
             f.flush()
             os.fsync(f.fileno())
-        self.done[start] = rec
+        self._remember(rec)
 
     def restore_into(self, l_counts: np.ndarray, u_counts: np.ndarray) -> int:
-        restored = 0
-        for rec in self.done.values():
+        for rec in self.records:
             srcs = np.asarray(rec["srcs"], dtype=np.int64)
             l_counts[srcs] = np.asarray(rec["l"], dtype=np.int64)
             u_counts[srcs] = np.asarray(rec["u"], dtype=np.int64)
-            restored += len(srcs)
-        return restored
+        return int(self.covered.sum())
 
 
 def detect_supernodes(pattern: np.ndarray, *, max_size: int = 64) -> np.ndarray:
@@ -146,15 +156,16 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         on_chunk = fp.update
 
     ckpt = ChunkCheckpointer(checkpoint_path, a.n) if checkpoint_path else None
-    if ckpt is not None and ckpt.done:
-        # restart path: only run the pending source ranges
+    if ckpt is not None and ckpt.covered.any():
+        # restart path: only run the uncovered sources, re-chunked on THIS
+        # run's grid (the recording run may have used a different concurrency)
         l_counts = np.zeros(a.n, dtype=np.int64)
         u_counts = np.zeros(a.n, dtype=np.int64)
         ckpt.restore_into(l_counts, u_counts)
-        pending = [s for s in range(0, a.n, eff_c) if not ckpt.is_done(s)]
-        supersteps = reinits = 0
-        for start in pending:
-            srcs = np.arange(start, min(start + eff_c, a.n), dtype=np.int32)
+        pending = ckpt.pending_sources()
+        supersteps = reinits = n_chunks = 0
+        for start in range(0, len(pending), eff_c):
+            srcs = pending[start:start + eff_c].astype(np.int32)
             res = run_multisource(graph, concurrency=eff_c, backend=backend,
                                   combined=combined, bubble=bubble,
                                   use_arena=use_arena, sources=srcs,
@@ -163,11 +174,13 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
             u_counts[srcs] = res.u_counts[srcs]
             supersteps += res.supersteps
             reinits += res.reinits
-            ckpt.record(start, srcs, res.l_counts[srcs], res.u_counts[srcs])
+            n_chunks += 1
+            ckpt.record(int(srcs[0]), srcs, res.l_counts[srcs],
+                        res.u_counts[srcs])
         ms = MultiSourceResult(
             l_counts=l_counts, u_counts=u_counts,
             edge_checks=np.zeros(a.n, np.int64), conv_iters=np.zeros(a.n, np.int64),
-            supersteps=supersteps, n_chunks=len(pending), concurrency=eff_c,
+            supersteps=supersteps, n_chunks=n_chunks, concurrency=eff_c,
             reinits=reinits, windows=0)
     else:
         ms = run_multisource(graph, concurrency=eff_c, backend=backend,
@@ -199,7 +212,8 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         sn_count = stats["n_supernodes"]
         sn_mean = stats["mean_size"]
 
-    nnz_offdiag = sum(int(np.sum(a.row(i) != i)) for i in range(a.n))
+    row_ids = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
+    nnz_offdiag = int(a.nnz) - int(np.count_nonzero(a.indices == row_ids))
     lu_offdiag = int(ms.l_counts.sum() + ms.u_counts.sum())
     fills = lu_offdiag - nnz_offdiag
     return SymbolicResult(

@@ -2,6 +2,7 @@
 
 * ``gsofa_relax`` — bottleneck-semiring relaxation, the GSoFa hot spot.
 * ``supernode_fp`` — per-column supernode fingerprints from label chunks.
+* ``panel_update`` — supernodal numeric panel update (MXU GEMM-subtract).
 * ``flash_attention`` — blocked online-softmax attention for the LM substrate.
 """
 from repro.kernels import ops, ref

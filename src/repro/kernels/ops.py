@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.gsofa_relax import minmax_relax_pallas
+from repro.kernels.panel_update import panel_update_pallas
 from repro.kernels.supernode_fp import supernode_fp_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -83,6 +84,43 @@ def column_fingerprints(rel: jax.Array, src: jax.Array, m1: jax.Array,
 def column_fingerprints_ref(rel: jax.Array, src: jax.Array, m1: jax.Array,
                             m2: jax.Array, valid: jax.Array) -> jax.Array:
     return _ref.supernode_fp_ref(rel, src, m1, m2, valid)
+
+
+def panel_update(acc: jax.Array, l_panel: jax.Array, u_panel: jax.Array, *,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    """(M, N) supernodal panel update ``acc - l_panel @ u_panel``; see
+    panel_update.py.  Pads all three operands with zeros (zero products leave
+    the padded region inert) and slices back.  float32 — the numeric driver
+    (repro.numeric) keeps its float64 path on numpy and routes the heavy GEMM
+    here on TPU."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    acc = jnp.asarray(acc, jnp.float32)
+    l_panel = jnp.asarray(l_panel, jnp.float32)
+    u_panel = jnp.asarray(u_panel, jnp.float32)
+    m, n = acc.shape
+    k = l_panel.shape[1]
+    if m == 0 or n == 0:
+        return acc
+    if k == 0:
+        return acc
+    block_m = min(block_m, max(8, ((m + 7) // 8) * 8))
+    block_n = min(block_n, max(128, ((n + 127) // 128) * 128))
+    block_k = min(block_k, max(128, ((k + 127) // 128) * 128))
+    acc_p = _pad_to(_pad_to(acc, 0, block_m, 0.0), 1, block_n, 0.0)
+    l_p = _pad_to(_pad_to(l_panel, 0, block_m, 0.0), 1, block_k, 0.0)
+    u_p = _pad_to(_pad_to(u_panel, 0, block_k, 0.0), 1, block_n, 0.0)
+    out = panel_update_pallas(acc_p, l_p, u_p, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              interpret=interpret)
+    return out[:m, :n]
+
+
+def panel_update_ref(acc, l_panel, u_panel):
+    return _ref.panel_update_ref(jnp.asarray(acc, jnp.float32),
+                                 jnp.asarray(l_panel, jnp.float32),
+                                 jnp.asarray(u_panel, jnp.float32))
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: supernodal panel update on the MXU (DESIGN.md §4).
+
+The supernodal left-looking numeric factorization (repro.numeric) applies the
+accumulated updates of a target panel J as one dense GEMM over the gathered
+ancestor columns:
+
+    out = acc - L @ U
+
+with ``acc`` the (M, N) gathered target panel rows, ``L`` the (M, K) gathered
+L-panel of all ancestor supernodes, and ``U`` the (K, N) solved U-rows of
+those ancestors against J.  Sparse LU spends almost all of its numeric flops
+here, and the supernode panel shapes are exactly what the 128 x 128 MXU
+wants (GLU3.0-style batched dense updates).
+
+Blocking follows the same VREG/MXU idiom as ``supernode_fp.py`` /
+``gsofa_relax.py``: float32 tiles with the second-to-last dim a multiple of 8
+and the last a multiple of 128.  Grid ``(M/Bm, N/Bn, K/Bk)`` with the
+contraction axis innermost so the (Bm, Bn) output tile stays resident in VMEM
+while the L/U tiles stream past it; the K-axis accumulation is a plain sum,
+so grid accumulation is race-free.  VMEM per step:
+``Bm*Bn + Bm*Bk + Bk*Bn`` float32 elements — the (128, 128, 128) defaults are
+192 KB << 16 MB.
+
+``kernels/ref.py::panel_update_ref`` is the jnp oracle
+(tests/test_kernels.py asserts parity); ``ops.panel_update`` pads and
+dispatches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _panel_update_kernel(acc_ref, l_ref, u_ref, out_ref):
+    """Grid (M/Bm, N/Bn, K/Bk); accumulate ``acc - L @ U`` over axis 2."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    out_ref[...] = out_ref[...] - jnp.dot(
+        l_ref[...], u_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def panel_update_pallas(acc: jax.Array, l_panel: jax.Array, u_panel: jax.Array,
+                        *, block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """(M, N) float32 ``acc - l_panel @ u_panel`` (MXU panel update).
+
+    acc: (M, N), l_panel: (M, K), u_panel: (K, N) — all float32, padded to
+    block multiples by the wrapper (ops.py); zero padding contributes zero
+    products, so the slice-back is exact.
+    """
+    m, n = acc.shape
+    k = l_panel.shape[1]
+    assert l_panel.shape == (m, k) and u_panel.shape == (k, n), (
+        acc.shape, l_panel.shape, u_panel.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _panel_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(acc, l_panel, u_panel)

@@ -51,6 +51,17 @@ def supernode_fp_ref(rel: jnp.ndarray, src: jnp.ndarray, m1: jnp.ndarray,
     return jnp.stack([cnt, hsum, hxor])
 
 
+def panel_update_ref(acc: jnp.ndarray, l_panel: jnp.ndarray,
+                     u_panel: jnp.ndarray) -> jnp.ndarray:
+    """Supernodal panel-update oracle for kernels/panel_update.py
+    (DESIGN.md §4): ``acc - l_panel @ u_panel`` in float32.
+
+    acc: (M, N) gathered target-panel rows; l_panel: (M, K) gathered ancestor
+    L columns; u_panel: (K, N) solved ancestor U rows.
+    """
+    return acc - jnp.dot(l_panel, u_panel, preferred_element_type=jnp.float32)
+
+
 def mamba_scan_ref(x, dt, b_t, c_t, a, d_skip):
     """Sequential-scan oracle of kernels/ssm_scan.mamba_scan (pure jnp)."""
     import jax

@@ -13,7 +13,7 @@ TPU the recurrence is the memory-latency hot spot; ``kernels/ssm_scan.py``
 holds the VMEM-resident Pallas kernel for it (the model uses the jnp scan,
 which is also the kernel's oracle).
 
-Deviations noted in DESIGN.md §7: the channel-mix FFN is the framework's
+Deviations noted in DESIGN.md §8: the channel-mix FFN is the framework's
 SwiGLU (same FLOP structure), and the per-head GroupNorm on the output is an
 RMSNorm per head.
 """

@@ -1,0 +1,28 @@
+"""Supernodal numeric LU consuming the symbolic panel partition.
+
+Pipeline (DESIGN.md §4): ``symbolic_factorize(a, detect_supernodes=True)``
+predicts the L/U structure and the supernode ranges -> schedule.py condenses
+the column dependencies onto panels (ancestor lists + dependency levels +
+``pack_panels`` bins) -> supernodal.py factorizes panel-by-panel with
+accumulated dense GEMM updates (Pallas MXU kernel
+``kernels/panel_update.py`` on TPU, float64 BLAS by default).
+
+    from repro import numeric_factorize, symbolic_factorize
+    sym = symbolic_factorize(a, detect_supernodes=True)
+    num = numeric_factorize(a, sym)          # num.l @ num.u == A (on pattern)
+
+``sparse/numeric.py::lu_nopivot`` remains the dense test oracle;
+``factorize_columns`` is the column-at-a-time baseline the benchmark
+(``benchmarks/bench_numeric.py``) compares against.
+"""
+from repro.numeric.schedule import PanelSchedule, build_schedule
+from repro.numeric.supernodal import (
+    NumericResult, factorize_columns, numeric_factorize,
+)
+from repro.sparse.numeric import ZeroPivotError
+
+__all__ = [
+    "PanelSchedule", "build_schedule",
+    "NumericResult", "factorize_columns", "numeric_factorize",
+    "ZeroPivotError",
+]

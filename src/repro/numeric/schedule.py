@@ -1,0 +1,125 @@
+"""Panel-level scheduling for supernodal numeric LU (DESIGN.md §4).
+
+The symbolic step hands over a supernode partition — contiguous ``[start,
+end)`` column ranges with identical below-diagonal structure — and the
+numeric step must factor those panels in an order that respects column
+dependencies.  Panel J depends on panel K < J iff the filled pattern has a
+structural nonzero in the U block ``U(K, J)`` (rows of K, columns of J):
+exactly then does K's L panel update J.  That is the supernodal elimination
+DAG (the condensation of the column etree onto supernodes).
+
+``build_schedule`` derives, from the dense predicted pattern:
+
+* ``ancestors[j]`` — the update list of panel j (ascending supernode ids);
+  left-looking consumes it in order: solve ``U(K, J)`` against L(K, K),
+  scatter into the rows of *later* ancestors, and defer the trailing rows to
+  one accumulated GEMM (supernodal.py);
+* ``level``/``levels`` — longest-path dependency levels: panels within a
+  level share no ancestor relation and can be factored independently (batch
+  unit for MXU dispatch / device assignment);
+* ``partition`` — the ``pack_panels`` bin assignment (LPT or contiguous) the
+  scheduler uses to group independent panels within a level; the numeric
+  result is invariant to the packing policy (tests assert bitwise equality),
+  only the batching/placement changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.supernodes.balance import PanelPartition, pack_panels
+
+
+@dataclasses.dataclass
+class PanelSchedule:
+    """Dependency-levelled execution plan over the supernode partition."""
+
+    supernodes: np.ndarray        # (k, 2) [start, end) column ranges
+    ancestors: List[np.ndarray]   # per panel: ascending ids of update panels
+    level: np.ndarray             # (k,) dependency level of each panel
+    levels: List[np.ndarray]      # panel ids per level, in execution order
+    partition: PanelPartition     # pack_panels bins (batching/placement)
+    col_counts: np.ndarray        # (n,) below-diagonal column counts of L
+
+    @property
+    def n_panels(self) -> int:
+        return len(self.supernodes)
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def stats(self) -> dict:
+        widths = self.supernodes[:, 1] - self.supernodes[:, 0]
+        n_updates = sum(len(a) for a in self.ancestors)
+        return {
+            "n_panels": self.n_panels,
+            "n_levels": self.n_levels,
+            "mean_level_width": (self.n_panels / max(1, self.n_levels)),
+            "max_panel_cols": int(widths.max()) if len(widths) else 0,
+            "n_updates": n_updates,
+            "balance_ratio": self.partition.balance_ratio,
+        }
+
+
+def _validate_supernodes(supernodes: np.ndarray, n: int) -> np.ndarray:
+    supernodes = np.asarray(supernodes, dtype=np.int64)
+    if supernodes.ndim != 2 or supernodes.shape[1] != 2:
+        raise ValueError(f"supernodes must be (k, 2) ranges, got "
+                         f"{supernodes.shape}")
+    if len(supernodes):
+        if supernodes[0, 0] != 0 or supernodes[-1, 1] != n:
+            raise ValueError("supernode ranges must cover [0, n)")
+        if not (supernodes[1:, 0] == supernodes[:-1, 1]).all():
+            raise ValueError("supernode ranges must be contiguous")
+        if not (supernodes[:, 1] > supernodes[:, 0]).all():
+            raise ValueError("supernode ranges must be non-empty")
+    elif n:
+        raise ValueError(f"no supernodes for an order-{n} matrix")
+    return supernodes
+
+
+def build_schedule(pattern: np.ndarray, supernodes: np.ndarray, *,
+                   n_bins: int = 8, policy: str = "lpt") -> PanelSchedule:
+    """Schedule from the dense predicted L+U pattern and supernode ranges.
+
+    ``pattern``: (n, n) bool, True on every structural nonzero of L+U
+    (diagonal included) — what ``core.gsofa.dense_pattern`` returns.
+    ``n_bins``: pack_panels bin count for within-level grouping (clamped to
+    the panel count so small problems don't over-provision).
+    """
+    pattern = np.asarray(pattern, dtype=bool)
+    n = pattern.shape[0]
+    supernodes = _validate_supernodes(supernodes, n)
+    k = len(supernodes)
+
+    sup_of_col = np.repeat(np.arange(k, dtype=np.int64),
+                           supernodes[:, 1] - supernodes[:, 0])
+    ids = np.arange(n)
+    col_counts = (pattern & (ids[:, None] > ids[None, :])).sum(
+        axis=0).astype(np.int64)
+
+    ancestors: List[np.ndarray] = []
+    level = np.zeros(k, dtype=np.int64)
+    for j, (s, e) in enumerate(supernodes):
+        rows = np.flatnonzero(pattern[:s, s:e].any(axis=1))
+        anc = np.unique(sup_of_col[rows])
+        ancestors.append(anc)
+        level[j] = level[anc].max() + 1 if len(anc) else 0
+
+    partition = pack_panels(supernodes, col_counts,
+                            max(1, min(n_bins, k)) if k else max(0, n_bins),
+                            policy=policy)
+
+    levels: List[np.ndarray] = []
+    for lv in range(int(level.max()) + 1 if k else 0):
+        members = np.flatnonzero(level == lv)
+        # group by pack_panels bin (batch/placement unit), stable within bin
+        order = np.lexsort((members, partition.assignment[members]))
+        levels.append(members[order])
+
+    return PanelSchedule(supernodes=supernodes, ancestors=ancestors,
+                         level=level, levels=levels, partition=partition,
+                         col_counts=col_counts)

@@ -1,0 +1,268 @@
+"""Supernodal left-looking numeric LU consuming the panel partition
+(DESIGN.md §4).
+
+This is the step the symbolic phase exists to feed: ``CSRMatrix`` values plus
+a ``SymbolicResult`` (counts, supernodes) in, unit-lower L and upper U out,
+factorized panel-by-panel:
+
+* **Panel gather** — each supernode J = [s, e) is a dense (rows, w) block;
+  the gathered structural rows of L(s:, J) and the ancestor U rows live as
+  contiguous dense operands, which is what dense hardware wants (GLU3.0-style
+  batched updates; structure-aware blocking per arXiv:2512.04389).
+* **Left-looking updates** — ancestors K of J (supernodes with a structural
+  ``U(K, J)`` block, schedule.py) are consumed in ascending order: solve
+  ``U(K, J) = L(K, K)^{-1} X(K, J)``, scatter the rank-|K| update into the
+  rows of *later* ancestors, and **defer the whole trailing update to one
+  accumulated GEMM** ``X(s:, J) -= L(s:, anc) @ U(anc, J)`` over the gathered
+  ancestor columns — the MXU panel-update kernel
+  (``kernels/panel_update.py``; numpy float64 BLAS on the default backend).
+* **Panel factor** — dense no-pivot LU of the diagonal block (raising
+  ``ZeroPivotError`` with the global column on zero/near-zero pivots), then
+  one triangular solve for the below-panel L rows.
+* **Level schedule** — panels are processed by dependency level
+  (schedule.py); within a level they are independent and grouped by the
+  ``pack_panels`` bins.  The factors are bitwise invariant to the packing
+  policy (LPT vs contiguous) because per-panel math never reads same-level
+  data.
+
+Structural exactness: updates and solves are restricted to the structural
+rows of the predicted pattern, so entries outside the symbolic prediction
+are *exactly* zero except under relaxed (T3) merges, where the explicit-zero
+padding of a panel is bounded by ``pattern_tol`` and zeroed (anything larger
+escaping the pattern raises — that would be a symbolic bug, the
+``validate_symbolic`` contract).
+
+``sparse/numeric.py::lu_nopivot`` stays the dense O(n^2) test oracle;
+``factorize_columns`` here is the honest column-at-a-time sparse baseline
+the benchmark compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+from scipy.linalg import solve_triangular
+
+from repro.numeric.schedule import PanelSchedule, build_schedule
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.numeric import (
+    check_pivot, generic_values, lu_inplace, pivot_tolerance,
+)
+
+_BACKENDS = ("numpy", "kernel")
+
+
+@dataclasses.dataclass
+class NumericResult:
+    """Factors + scheduling/perf counters of one supernodal factorization."""
+
+    n: int
+    l: np.ndarray                # (n, n) float64, unit lower (diag = 1)
+    u: np.ndarray                # (n, n) float64, upper incl. diagonal
+    schedule: PanelSchedule
+    backend: str
+    elapsed_s: float
+    n_updates: int               # ancestor panel updates consumed
+    gemm_flops: int              # flops of the accumulated trailing GEMMs
+    outside_max: float           # largest |value| found outside the pattern
+
+    @property
+    def n_supernodes(self) -> int:
+        return self.schedule.n_panels
+
+    @property
+    def n_levels(self) -> int:
+        return self.schedule.n_levels
+
+    def reconstruct(self) -> np.ndarray:
+        """L @ U — for residual checks against the assembled matrix."""
+        return self.l @ self.u
+
+
+def _solve_unit_lower(block: np.ndarray, rhs: np.ndarray) -> np.ndarray:
+    """X with (I + strict_lower(block)) @ X = rhs (block stores L\\U packed)."""
+    if block.shape[0] == 1:
+        return rhs.copy()
+    return solve_triangular(block, rhs, lower=True, unit_diagonal=True,
+                            check_finite=False)
+
+
+def _solve_upper_right(block: np.ndarray, rhs: np.ndarray) -> np.ndarray:
+    """X with X @ triu(block) = rhs (below-panel L rows)."""
+    if block.shape[0] == 1:
+        return rhs / block[0, 0]
+    return solve_triangular(block, rhs.T, lower=False, trans="T",
+                            check_finite=False).T
+
+
+def _factor_panel(m: np.ndarray, pattern: np.ndarray, schedule: PanelSchedule,
+                  j: int, piv_tol: float, backend: str) -> Tuple[int, int]:
+    """Factor panel j in place; returns (#ancestor updates, trailing flops)."""
+    s, e = schedule.supernodes[j]
+    w = e - s
+    cols = np.arange(s, e)
+    anc = schedule.ancestors[j]
+    rows_below = s + np.flatnonzero(pattern[s:, s:e].any(axis=1))
+    flops = 0
+
+    if len(anc):
+        widths = schedule.supernodes[anc, 1] - schedule.supernodes[anc, 0]
+        offs = np.concatenate([[0], np.cumsum(widths)])
+        anc_rows = np.concatenate([np.arange(ks, ke)
+                                   for ks, ke in schedule.supernodes[anc]])
+
+        # 1. gather the ancestor sub-matrix and target rows into dense blocks
+        #    ONCE; the ascending per-ancestor solves + rank-|K| updates then
+        #    run on contiguous slices (non-ancestor rows above s are exact
+        #    zeros — never touched)
+        lsub = m[np.ix_(anc_rows, anc_rows)]          # (K, K) gathered L
+        b = m[np.ix_(anc_rows, cols)]                 # (K, w) gathered X rows
+        for idx in range(len(anc)):
+            r0, r1 = offs[idx], offs[idx + 1]
+            b[r0:r1] = _solve_unit_lower(lsub[r0:r1, r0:r1], b[r0:r1])
+            if r1 < len(anc_rows):
+                b[r1:] -= lsub[r1:, r0:r1] @ b[r0:r1]
+        m[np.ix_(anc_rows, cols)] = b                 # solved U(anc, J)
+
+        # 2. accumulated trailing update: one GEMM over the gathered ancestor
+        #    L panel against the solved U rows (MXU kernel on TPU)
+        lp = m[np.ix_(rows_below, anc_rows)]
+        acc = m[np.ix_(rows_below, cols)]
+        if backend == "kernel":
+            from repro.kernels import ops as kops
+
+            upd = np.asarray(kops.panel_update(acc, lp, b), dtype=np.float64)
+        else:
+            upd = acc - lp @ b
+        m[np.ix_(rows_below, cols)] = upd
+        flops = 2 * len(rows_below) * len(anc_rows) * w
+
+    # 3. diagonal-block factor + below-panel triangular solve
+    lu_inplace(m[s:e, s:e], piv_tol, col0=s)
+    rows_gt = rows_below[rows_below >= e]
+    if len(rows_gt):
+        m[np.ix_(rows_gt, cols)] = _solve_upper_right(
+            m[s:e, s:e], m[np.ix_(rows_gt, cols)])
+    return len(anc), flops
+
+
+def numeric_factorize(a: CSRMatrix, sym=None, *,
+                      values: Optional[np.ndarray] = None,
+                      pattern: Optional[np.ndarray] = None,
+                      n_bins: int = 8, policy: str = "lpt",
+                      backend: str = "numpy",
+                      piv_tol: Optional[float] = None,
+                      check_pattern: bool = True,
+                      pattern_tol: Optional[float] = None) -> NumericResult:
+    """Supernodal left-looking LU of ``values`` on A's structure.
+
+    ``a``: structural CSR; ``sym``: a ``SymbolicResult`` from
+    ``symbolic_factorize(a, detect_supernodes=True)`` (computed on the fly
+    when omitted; without a supernode partition the serial detector runs on
+    the pattern).  ``values``: dense (n, n) float64 on A's pattern (defaults
+    to ``generic_values(a)``); ``pattern``: the dense predicted L+U pattern
+    (recomputed from the graph when omitted).  ``backend``: "numpy" (float64
+    BLAS, default) or "kernel" (float32 Pallas MXU panel updates — TPU
+    precision documented in DESIGN.md §4).
+
+    Raises ``ZeroPivotError`` (global column index) on zero/near-zero pivots
+    and ``ValueError`` if any value above ``pattern_tol * scale`` escapes the
+    symbolic prediction (the ``validate_symbolic`` contract).
+    """
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
+    if pattern_tol is None:
+        # float32 MXU updates leave f32-roundoff garbage at the explicit
+        # zeros of relaxed panels; the float64 path stays at f64 roundoff
+        pattern_tol = 1e-4 if backend == "kernel" else 1e-8
+    t0 = time.perf_counter()
+    n = a.n
+    if values is None:
+        values = generic_values(a)
+    values = np.asarray(values, dtype=np.float64)
+    if values.shape != (n, n):
+        raise ValueError(f"values must be ({n}, {n}), got {values.shape}")
+    if pattern is None:
+        from repro.core.gsofa import dense_pattern, prepare_graph
+
+        pattern = dense_pattern(prepare_graph(a))
+    pattern = np.asarray(pattern, dtype=bool).copy()
+    if pattern.shape != (n, n):
+        raise ValueError(f"pattern must be ({n}, {n}), got {pattern.shape}")
+    np.fill_diagonal(pattern, True)
+
+    if sym is None:
+        from repro.core.symbolic import symbolic_factorize
+
+        sym = symbolic_factorize(a, detect_supernodes=True)
+    if sym.n != n:
+        raise ValueError(f"symbolic result is for n={sym.n}, matrix has n={n}")
+    supernodes = sym.supernodes
+    if supernodes is None:
+        from repro.core.symbolic import detect_supernodes
+
+        supernodes = detect_supernodes(pattern)
+
+    schedule = build_schedule(pattern, supernodes, n_bins=n_bins,
+                              policy=policy)
+    scale = float(np.abs(values).max()) if values.size else 0.0
+    if piv_tol is None:
+        piv_tol = pivot_tolerance(scale)
+
+    m = values.copy()
+    n_updates = 0
+    gemm_flops = 0
+    for level in schedule.levels:
+        for j in level:
+            upd, flops = _factor_panel(m, pattern, schedule, int(j),
+                                       piv_tol, backend)
+            n_updates += upd
+            gemm_flops += flops
+
+    outside = ~pattern
+    outside_max = float(np.abs(m[outside]).max()) if outside.any() else 0.0
+    if check_pattern and outside_max > pattern_tol * scale:
+        raise ValueError(
+            f"numeric factorization escaped the symbolic prediction: "
+            f"|{outside_max:.3e}| outside the pattern (tol "
+            f"{pattern_tol * scale:.3e}) — symbolic under-prediction")
+    m[outside] = 0.0
+
+    l = np.tril(m, -1) + np.eye(n)
+    u = np.triu(m)
+    return NumericResult(n=n, l=l, u=u, schedule=schedule, backend=backend,
+                         elapsed_s=time.perf_counter() - t0,
+                         n_updates=n_updates, gemm_flops=gemm_flops,
+                         outside_max=outside_max)
+
+
+def factorize_columns(values: np.ndarray, pattern: np.ndarray, *,
+                      piv_tol: Optional[float] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Column-at-a-time left-looking sparse LU — the pre-supernodal baseline
+    (one axpy per structural U entry, no panel batching), used by
+    ``benchmarks/bench_numeric.py`` as the comparison point and by tests as
+    an independent implementation.  Same pivot contract as the supernodal
+    path."""
+    values = np.asarray(values, dtype=np.float64)
+    n = values.shape[0]
+    pattern = np.asarray(pattern, dtype=bool).copy()
+    np.fill_diagonal(pattern, True)
+    m = values.copy()
+    if piv_tol is None:
+        piv_tol = pivot_tolerance(np.abs(m).max() if m.size else 0.0)
+    # CSC-style below-diagonal structure of every L column, precomputed
+    lrows = [j + 1 + np.flatnonzero(pattern[j + 1:, j]) for j in range(n)]
+    for j in range(n):
+        for k in np.flatnonzero(pattern[:j, j]):
+            rows = lrows[k]
+            m[rows, j] -= m[rows, k] * m[k, j]
+        piv = m[j, j]
+        check_pivot(j, piv, piv_tol)
+        m[lrows[j], j] /= piv
+    m[~pattern] = 0.0
+    l = np.tril(m, -1) + np.eye(n)
+    u = np.triu(m)
+    return l, u

@@ -89,7 +89,11 @@ class DynamicScheduler:
         l_counts = np.zeros(n, dtype=np.int64)
         u_counts = np.zeros(n, dtype=np.int64)
         for ci, start in enumerate(chunk_starts):
-            if self.ckpt is not None and self.ckpt.is_done(start):
+            srcs = np.arange(start, min(start + self.concurrency, n))
+            # coverage is per source, not per grid start: a checkpoint
+            # recorded under a different concurrency still restarts correctly
+            # (a partially-covered chunk recomputes, which is idempotent)
+            if self.ckpt is not None and self.ckpt.covered[srcs].all():
                 continue
             queue.append(ci)
         if self.ckpt is not None:

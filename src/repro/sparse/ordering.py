@@ -1,7 +1,7 @@
 """Fill-reducing orderings.
 
 The paper reorders with ParMETIS before symbolic factorization.  Ordering quality
-is orthogonal to the symbolic *algorithm* (DESIGN.md §7.5); we provide RCM (via
+is orthogonal to the symbolic *algorithm* (DESIGN.md §8.5); we provide RCM (via
 scipy), natural, and random orderings so benchmarks can show the algorithm across
 ordering regimes.
 """

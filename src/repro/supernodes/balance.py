@@ -58,10 +58,16 @@ def pack_panels(ranges: np.ndarray, counts: np.ndarray, n_panels: int, *,
                 policy: str = "lpt") -> PanelPartition:
     """Bin-pack supernodes into ``n_panels`` near-equal-nnz panels."""
     k = len(ranges)
+    if n_panels <= 0 and k > 0:
+        # an assignment into an empty partition would silently point every
+        # supernode at panel 0 of a zero-length loads array
+        raise ValueError(
+            f"pack_panels: n_panels must be positive to pack {k} supernodes, "
+            f"got {n_panels}")
     weights = supernode_weights(ranges, counts)
     assignment = np.zeros(k, dtype=np.int64)
-    loads = np.zeros(n_panels, dtype=np.int64)
-    if k == 0 or n_panels <= 0:
+    loads = np.zeros(max(0, n_panels), dtype=np.int64)
+    if k == 0:
         return PanelPartition(assignment=assignment, loads=loads,
                               n_panels=max(0, n_panels))
     if policy == "lpt":

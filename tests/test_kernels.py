@@ -112,6 +112,66 @@ def test_supernode_fp_property(s, v, seed):
 
 
 # ---------------------------------------------------------------------------
+# supernodal panel-update kernel
+# ---------------------------------------------------------------------------
+
+def _pu_inputs(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.standard_normal((m, n)).astype(np.float32)
+    lp = rng.standard_normal((m, k)).astype(np.float32)
+    up = rng.standard_normal((k, n)).astype(np.float32)
+    return tuple(jnp.asarray(x) for x in (acc, lp, up))
+
+
+@pytest.mark.parametrize("m,n,k", [
+    (1, 1, 1), (5, 100, 7), (8, 128, 128), (64, 64, 64), (130, 260, 70),
+    (200, 300, 150), (17, 129, 33),
+])
+def test_panel_update_shapes(m, n, k):
+    args = _pu_inputs(m, n, k, seed=m * 7 + n + k)
+    out = ops.panel_update(*args)
+    ref = ops.panel_update_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("blocks", [(8, 128, 128), (16, 128, 256),
+                                    (128, 128, 128)])
+def test_panel_update_block_shape_invariance(blocks):
+    bm, bn, bk = blocks
+    args = _pu_inputs(70, 200, 90, seed=0)
+    out = ops.panel_update(*args, block_m=bm, block_n=bn, block_k=bk)
+    ref = ops.panel_update_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_panel_update_empty_contraction_is_identity():
+    acc = jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4))
+    lp = jnp.zeros((3, 0), jnp.float32)
+    up = jnp.zeros((0, 4), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ops.panel_update(acc, lp, up)),
+                                  np.asarray(acc))
+
+
+def test_panel_update_zero_l_keeps_acc():
+    acc, lp, up = _pu_inputs(24, 140, 40, seed=2)
+    out = ops.panel_update(acc, jnp.zeros_like(lp), up)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(acc))
+
+
+@given(st.integers(1, 40), st.integers(1, 80), st.integers(1, 48),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_panel_update_property(m, n, k, seed):
+    args = _pu_inputs(m, n, k, seed)
+    out = ops.panel_update(*args)
+    ref = ops.panel_update_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # flash attention kernel
 # ---------------------------------------------------------------------------
 

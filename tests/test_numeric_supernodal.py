@@ -1,0 +1,288 @@
+"""Supernodal numeric LU (repro.numeric) vs the dense no-pivot oracle.
+
+Contract (ISSUE 2 / DESIGN.md §4): on every matrices.py generator the
+supernodal factors match ``lu_nopivot`` to <= 1e-10 relative error, every
+nonzero stays inside the symbolic prediction, and the factors are bitwise
+invariant to the panel packing policy.  Plus the PR's bugfix regressions:
+checkpoint restart under a changed concurrency, zero-pivot surfacing, and
+pack_panels validation.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.gsofa import dense_pattern, prepare_graph
+from repro.core.symbolic import symbolic_factorize
+from repro.numeric import (
+    NumericResult, build_schedule, factorize_columns, numeric_factorize,
+)
+from repro.sparse import (
+    banded_random, chemical_like, circuit_like, economic_like,
+    grid2d_laplacian, grid3d_laplacian, permute_csr, random_pattern,
+    rcm_order,
+)
+from repro.sparse.csr import csr_from_dense
+from repro.sparse.numeric import ZeroPivotError, generic_values, lu_nopivot
+from repro.supernodes import pack_panels
+
+# every generator in sparse/matrices.py, at n <= 1024
+GENERATORS = {
+    "grid2d": lambda: grid2d_laplacian(14),
+    "grid3d": lambda: grid3d_laplacian(6),
+    "circuit": lambda: circuit_like(300, seed=7),
+    "economic": lambda: economic_like(256, block=16, seed=2),
+    "chemical": lambda: chemical_like(320, stage=16, seed=3),
+    "banded": lambda: banded_random(240, band=6, seed=4),
+    "random": lambda: random_pattern(160, density=0.02, seed=5),
+}
+
+
+def _setup(name, relax=0):
+    a = GENERATORS[name]()
+    a = permute_csr(a, rcm_order(a))
+    sym = symbolic_factorize(a, concurrency=64, detect_supernodes=True,
+                             supernode_relax=relax)
+    pattern = dense_pattern(prepare_graph(a))
+    values = generic_values(a)
+    return a, sym, pattern, values
+
+
+def _rel_err(got, ref):
+    return np.abs(got - ref).max() / np.abs(ref).max()
+
+
+# ---------------------------------------------------------------------------
+# value parity + pattern containment across the generator suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_parity_and_containment(name):
+    a, sym, pattern, values = _setup(name)
+    num = numeric_factorize(a, sym, values=values, pattern=pattern)
+    l0, u0 = lu_nopivot(values)
+    assert _rel_err(num.l, l0) <= 1e-10
+    assert _rel_err(num.u, u0) <= 1e-10
+    # every nonzero inside the symbolic prediction (validate_symbolic contract)
+    pat = pattern.copy()
+    np.fill_diagonal(pat, True)
+    assert not ((num.l != 0) & ~(pat | np.eye(a.n, dtype=bool))).any()
+    assert not ((num.u != 0) & ~pat).any()
+    # reconstruction: L @ U == A on A's structure
+    np.testing.assert_allclose(num.reconstruct(), values,
+                               rtol=1e-9, atol=1e-9 * np.abs(values).max())
+
+
+@pytest.mark.parametrize("name", ["grid2d", "circuit"])
+def test_relaxed_supernodes_keep_parity(name):
+    """T3-merged panels carry explicit zeros; values must not change."""
+    a, sym, pattern, values = _setup(name, relax=4)
+    num = numeric_factorize(a, sym, values=values, pattern=pattern)
+    l0, u0 = lu_nopivot(values)
+    assert _rel_err(num.l, l0) <= 1e-10
+    assert _rel_err(num.u, u0) <= 1e-10
+
+
+def test_column_baseline_parity():
+    a, _, pattern, values = _setup("economic")
+    l, u = factorize_columns(values, pattern)
+    l0, u0 = lu_nopivot(values)
+    assert _rel_err(l, l0) <= 1e-10
+    assert _rel_err(u, u0) <= 1e-10
+
+
+def test_default_arguments_end_to_end():
+    """numeric_factorize(a) alone: symbolic + pattern computed on the fly."""
+    a = circuit_like(96, seed=11)
+    num = numeric_factorize(a)
+    l0, u0 = lu_nopivot(generic_values(a))
+    assert _rel_err(num.l, l0) <= 1e-10
+    assert _rel_err(num.u, u0) <= 1e-10
+
+
+def test_symbolic_without_supernodes_falls_back():
+    """A SymbolicResult lacking the partition still factorizes (serial
+    detector on the pattern)."""
+    a = banded_random(120, band=5, seed=9)
+    sym = symbolic_factorize(a, concurrency=32)          # no detection
+    assert sym.supernodes is None
+    num = numeric_factorize(a, sym, values=generic_values(a))
+    l0, u0 = lu_nopivot(generic_values(a))
+    assert _rel_err(num.l, l0) <= 1e-10
+
+
+def test_badly_scaled_values_keep_relative_contract():
+    """The pattern-escape guard is relative to the matrix scale — tiny-scale
+    inputs must neither false-raise nor silently mask real escapes."""
+    a, sym, pattern, values = _setup("banded")
+    tiny = values * 1e-6
+    num = numeric_factorize(a, sym, values=tiny, pattern=pattern)
+    l0, u0 = lu_nopivot(tiny)
+    assert _rel_err(num.l, l0) <= 1e-10
+    assert _rel_err(num.u, u0) <= 1e-10
+    # a genuine under-prediction (pattern missing a position where A itself
+    # is nonzero) raises even at tiny scale instead of being zeroed away
+    bad = pattern.copy()
+    for r in range(a.n - 1, -1, -1):
+        cs = a.row(r)
+        cs = cs[cs != r]
+        if len(cs):
+            bad[r, cs[0]] = False
+            break
+    with pytest.raises(ValueError, match="escaped the symbolic prediction"):
+        numeric_factorize(a, sym, values=tiny, pattern=bad)
+
+
+def test_kernel_backend_close_in_f32():
+    a, sym, pattern, values = _setup("random")
+    num = numeric_factorize(a, sym, values=values, pattern=pattern,
+                            backend="kernel")
+    l0, u0 = lu_nopivot(values)
+    assert _rel_err(num.l, l0) <= 1e-4
+    assert _rel_err(num.u, u0) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# panel-schedule independence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["grid2d", "chemical"])
+def test_packing_policy_does_not_change_factors(name):
+    """LPT vs contiguous bins only regroup independent panels within a
+    dependency level — factors must be bitwise identical."""
+    a, sym, pattern, values = _setup(name, relax=2)
+    lpt = numeric_factorize(a, sym, values=values, pattern=pattern,
+                            policy="lpt")
+    contig = numeric_factorize(a, sym, values=values, pattern=pattern,
+                               policy="contiguous")
+    assert np.array_equal(lpt.l, contig.l)
+    assert np.array_equal(lpt.u, contig.u)
+    more_bins = numeric_factorize(a, sym, values=values, pattern=pattern,
+                                  n_bins=3)
+    assert np.array_equal(lpt.l, more_bins.l)
+
+
+def test_schedule_levels_are_topological():
+    a, sym, pattern, _ = _setup("circuit", relax=2)
+    sched = build_schedule(pattern, sym.supernodes)
+    for j, anc in enumerate(sched.ancestors):
+        assert (anc < j).all()
+        assert (sched.level[anc] < sched.level[j]).all()
+    executed = np.concatenate(sched.levels)
+    assert sorted(executed.tolist()) == list(range(sched.n_panels))
+    stats = sched.stats()
+    assert stats["n_panels"] == len(sym.supernodes)
+    assert stats["n_levels"] == sched.n_levels
+
+
+def test_schedule_rejects_bad_supernodes():
+    pattern = np.eye(6, dtype=bool)
+    with pytest.raises(ValueError):
+        build_schedule(pattern, np.array([[0, 3], [4, 6]]))   # gap
+    with pytest.raises(ValueError):
+        build_schedule(pattern, np.array([[0, 3]]))           # short cover
+
+
+# ---------------------------------------------------------------------------
+# zero-pivot regression (confirmed bug: silent inf/NaN propagation)
+# ---------------------------------------------------------------------------
+
+def test_lu_nopivot_raises_on_zero_pivot():
+    with pytest.raises(ZeroPivotError) as ei:
+        lu_nopivot(np.array([[0.0, 1.0], [1.0, 1.0]]))
+    assert ei.value.k == 0
+    # near-zero and non-finite pivots are rejected too
+    with pytest.raises(ZeroPivotError):
+        lu_nopivot(np.array([[1e-300, 1.0], [1.0, 1.0]]))
+    with pytest.raises(ZeroPivotError):
+        lu_nopivot(np.array([[np.nan, 1.0], [1.0, 1.0]]))
+
+
+def test_lu_nopivot_no_silent_nan():
+    """The old behavior: RuntimeWarning only, inf/NaN in the factors."""
+    dense = np.array([[1.0, 2.0], [2.0, 4.0]])    # pivot 2 becomes exactly 0
+    with pytest.raises(ZeroPivotError) as ei:
+        lu_nopivot(dense)
+    assert ei.value.k == 1
+
+
+def test_supernodal_surfaces_zero_pivot_per_panel():
+    vals = np.array([[0.0, 1.0], [1.0, 1.0]])
+    a = csr_from_dense(np.ones((2, 2)))
+    with pytest.raises(ZeroPivotError) as ei:
+        numeric_factorize(a, values=vals)
+    assert ei.value.k == 0
+
+    with pytest.raises(ZeroPivotError):
+        factorize_columns(vals, np.ones((2, 2), dtype=bool))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-restart regression (confirmed bug: changed concurrency dropped
+# sources silently)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_restart_with_changed_concurrency(tmp_path):
+    a = economic_like(128, block=16, seed=33)
+    ref = symbolic_factorize(a, concurrency=32)
+    path = os.path.join(tmp_path, "ckpt.jsonl")
+    symbolic_factorize(a, concurrency=32, checkpoint_path=path)
+    # crash after the first chunk: truncate to one record
+    with open(path) as f:
+        first = f.readline()
+    with open(path, "w") as f:
+        f.write(first)
+    # restart on a DIFFERENT grid: the old code matched recorded starts
+    # against the new grid and silently zeroed rows 32..63
+    r = symbolic_factorize(a, concurrency=64, checkpoint_path=path)
+    assert np.array_equal(r.l_counts, ref.l_counts)
+    assert np.array_equal(r.u_counts, ref.u_counts)
+    assert r.lu_nnz == ref.lu_nnz
+
+
+@pytest.mark.parametrize("restart_c", [16, 48, 128])
+def test_checkpoint_restart_grid_sweep(tmp_path, restart_c):
+    a = circuit_like(96, seed=21)
+    ref = symbolic_factorize(a, concurrency=32)
+    path = os.path.join(tmp_path, "ckpt.jsonl")
+    symbolic_factorize(a, concurrency=32, checkpoint_path=path)
+    with open(path) as f:
+        keep = f.readlines()[:2]
+    with open(path, "w") as f:
+        f.writelines(keep)
+    r = symbolic_factorize(a, concurrency=restart_c, checkpoint_path=path)
+    assert np.array_equal(r.l_counts, ref.l_counts)
+    assert np.array_equal(r.u_counts, ref.u_counts)
+
+
+# ---------------------------------------------------------------------------
+# pack_panels validation regression
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_panels", [0, -1])
+def test_pack_panels_rejects_empty_partition_with_work(n_panels):
+    ranges = np.array([[0, 2], [2, 3]])
+    counts = np.array([2, 1, 0])
+    with pytest.raises(ValueError):
+        pack_panels(ranges, counts, n_panels)
+
+
+def test_pack_panels_empty_inputs_still_fine():
+    part = pack_panels(np.zeros((0, 2), np.int64), np.zeros(0, np.int64), 0)
+    assert part.n_panels == 0 and part.balance_ratio == 1.0
+
+
+# ---------------------------------------------------------------------------
+# result surface
+# ---------------------------------------------------------------------------
+
+def test_numeric_result_counters():
+    a, sym, pattern, values = _setup("grid2d", relax=2)
+    num = numeric_factorize(a, sym, values=values, pattern=pattern)
+    assert isinstance(num, NumericResult)
+    assert num.n == a.n
+    assert num.n_supernodes == len(sym.supernodes)
+    assert num.n_levels >= 1
+    assert num.n_updates > 0 and num.gemm_flops > 0
+    assert num.elapsed_s > 0
+    assert np.array_equal(np.diag(num.l), np.ones(a.n))

@@ -52,6 +52,26 @@ def test_checkpoint_restart_resumes_pending(tmp_path):
     assert r2.supersteps < r1.supersteps
 
 
+def test_scheduler_restart_with_changed_concurrency(tmp_path):
+    """Chunk coverage is per source: a checkpoint recorded under one
+    concurrency restarts correctly under another (regression: grid-keyed
+    matching silently zeroed the uncovered half of mismatched chunks)."""
+    a = economic_like(128, block=16, seed=34)
+    l_ref, u_ref = _refs(a)
+    g = prepare_graph(a)
+    path = os.path.join(tmp_path, "ckpt.jsonl")
+    DynamicScheduler(g, concurrency=32,
+                     checkpointer=ChunkCheckpointer(path, a.n)).run()
+    with open(path) as f:
+        first = f.readline()
+    with open(path, "w") as f:
+        f.write(first)
+    out = DynamicScheduler(g, concurrency=64,
+                           checkpointer=ChunkCheckpointer(path, a.n)).run()
+    assert np.array_equal(out["l_counts"], l_ref)
+    assert np.array_equal(out["u_counts"], u_ref)
+
+
 def test_checkpointer_restore(tmp_path):
     path = os.path.join(tmp_path, "c.jsonl")
     ck = ChunkCheckpointer(path, 10)
