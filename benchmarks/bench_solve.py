@@ -1,0 +1,155 @@
+"""End-to-end solve() on packed CSC-panel factors (DESIGN.md §9).
+
+Two regimes:
+
+* fill-heavy stencil generators (the bench_numeric matrices) — full
+  pipeline with dense-oracle parity: ``solve`` must match
+  ``numpy.linalg.solve`` and reach a relative residual <= 1e-10;
+* a large full-band matrix (n = 20_000) driven entirely through the sparse
+  path (CSR-aligned values + ``CSCPattern`` + uniform panels) — the regime
+  the dense working matrix could never reach; the packed store is asserted
+  to stay O(nnz(L+U)) (no (n, n) allocation anywhere).
+
+Exits nonzero (via run.py) if any residual or memory gate fails.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import print_table, save_artifact, timeit
+from repro.core.gsofa import dense_pattern, prepare_graph
+from repro.core.symbolic import symbolic_factorize
+from repro.numeric import (
+    CSCPattern, numeric_factorize, solve, solve_factored, uniform_supernodes,
+)
+from repro.numeric.solve import build_solve_schedule
+from repro.sparse import (
+    banded_full, grid2d_laplacian, grid3d_laplacian, permute_csr, rcm_order,
+)
+from repro.sparse.numeric import generic_values, generic_values_csr
+
+RESIDUAL_GATE = 1e-10
+
+MATRICES = {
+    "grid2d-24": lambda: grid2d_laplacian(24),
+    "grid3d-8": lambda: grid3d_laplacian(8),
+}
+
+LARGE_N = 20_000
+LARGE_BAND = 4
+LARGE_PANEL = 8
+
+
+def _small_case(name, gen, repeats):
+    a = permute_csr(gen(), rcm_order(gen()))
+    sym = symbolic_factorize(a, concurrency=256, detect_supernodes=True,
+                             supernode_relax=2)
+    pattern = dense_pattern(prepare_graph(a), batch=256)
+    values = generic_values(a)
+    rng = np.random.default_rng(42)
+    b = rng.standard_normal(a.n)
+
+    t_factor = timeit(lambda: numeric_factorize(a, sym, values=values,
+                                                pattern=pattern),
+                      repeats=repeats)
+    res = solve(a, b, sym=sym, values=values, pattern=pattern)
+    t_solve = timeit(lambda: solve_factored(res.num, b), repeats=repeats)
+
+    x0 = np.linalg.solve(values, b)
+    rel = float(np.abs(res.x - x0).max() / np.abs(x0).max())
+    if rel > 1e-10:
+        raise RuntimeError(f"{name}: solve() disagrees with "
+                           f"numpy.linalg.solve ({rel:.2e})")
+    if res.residual > RESIDUAL_GATE:
+        raise RuntimeError(f"{name}: residual {res.residual:.2e} above "
+                           f"{RESIDUAL_GATE:.0e}")
+    sched = build_solve_schedule(res.num.store)
+    return a, res, {
+        "n": a.n, "nnz": a.nnz,
+        "store_entries": res.num.store_entries,
+        "store_mb": res.num.store.nbytes / 1e6,
+        "dense_mb": a.n * a.n * 8 / 1e6,
+        "mem_ratio": (a.n * a.n * 8) / max(1, res.num.store.nbytes),
+        "t_factor_s": t_factor, "t_solve_s": t_solve,
+        "residual_first": res.residuals[0], "residual_final": res.residual,
+        "refine_accepted": res.refine_accepted,
+        "n_fwd_levels": sched.n_fwd_levels,
+        "n_bwd_levels": sched.n_bwd_levels,
+        "rel_err_vs_dense": rel,
+    }
+
+
+def _large_case(repeats):
+    """The sparse-path regime: everything O(nnz(L+U)), no dense anywhere."""
+    n, band, width = LARGE_N, LARGE_BAND, LARGE_PANEL
+    a = banded_full(n, band=band)
+    pattern = CSCPattern.banded(n, band)        # exact: full bands don't fill
+    sup = uniform_supernodes(n, width)
+    values = generic_values_csr(a)
+    rng = np.random.default_rng(42)
+    b = rng.standard_normal(n)
+
+    t_factor = timeit(lambda: numeric_factorize(a, values=values,
+                                                pattern=pattern,
+                                                supernodes=sup),
+                      repeats=repeats, warmup=1)
+    res = solve(a, b, values=values, pattern=pattern, supernodes=sup)
+    t_solve = timeit(lambda: solve_factored(res.num, b), repeats=repeats,
+                     warmup=0)
+
+    store = res.num.store
+    if store.total_entries > 4 * pattern.nnz:
+        raise RuntimeError(
+            f"packed store grew past O(nnz(L+U)): {store.total_entries} "
+            f"slots for {pattern.nnz} pattern nonzeros")
+    biggest = max(blk.size for blk in store.blocks)
+    if biggest >= n:
+        raise RuntimeError(
+            f"a panel block holds {biggest} entries — the packed path must "
+            f"never approach an (n, n) allocation")
+    if res.residual > RESIDUAL_GATE:
+        raise RuntimeError(f"banded-{n}: residual {res.residual:.2e} above "
+                           f"{RESIDUAL_GATE:.0e}")
+    sched = build_solve_schedule(store)
+    return {
+        "n": n, "nnz": a.nnz,
+        "store_entries": store.total_entries,
+        "store_mb": store.nbytes / 1e6,
+        "dense_mb": n * n * 8 / 1e6,
+        "mem_ratio": (n * n * 8) / max(1, store.nbytes),
+        "t_factor_s": t_factor, "t_solve_s": t_solve,
+        "residual_first": res.residuals[0], "residual_final": res.residual,
+        "refine_accepted": res.refine_accepted,
+        "n_fwd_levels": sched.n_fwd_levels,
+        "n_bwd_levels": sched.n_bwd_levels,
+    }
+
+
+def run(repeats: int = 3) -> dict:
+    results = {}
+    rows = []
+    for name, gen in MATRICES.items():
+        _, res, r = _small_case(name, gen, repeats)
+        results[name] = r
+        rows.append([name, r["n"], f"{r['t_factor_s']*1e3:.0f}ms",
+                     f"{r['t_solve_s']*1e3:.1f}ms",
+                     f"{r['residual_final']:.1e}",
+                     f"{r['mem_ratio']:.0f}x"])
+    r = _large_case(repeats)
+    results[f"banded-{LARGE_N//1000}k"] = r
+    rows.append([f"banded-{LARGE_N//1000}k", r["n"],
+                 f"{r['t_factor_s']*1e3:.0f}ms", f"{r['t_solve_s']*1e3:.1f}ms",
+                 f"{r['residual_final']:.1e}", f"{r['mem_ratio']:.0f}x"])
+    print_table("End-to-end solve on packed CSC-panel factors",
+                ["matrix", "|V|", "factor", "solve", "residual",
+                 "mem vs dense"], rows)
+    save_artifact("bench_solve", results)
+    return results
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

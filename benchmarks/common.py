@@ -1,22 +1,145 @@
-"""Shared benchmark helpers: dataset loading, timing, artifact output."""
+"""Shared benchmark helpers: dataset loading, timing, artifact output, and
+the baseline-regression gate CI runs (``run.py --check-baseline``)."""
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
-from typing import Callable, Dict, Iterable
+from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
 
 
-def save_artifact(name: str, payload: Dict) -> str:
-    os.makedirs(ARTIFACTS, exist_ok=True)
-    path = os.path.join(ARTIFACTS, name + ".json")
+def artifact_meta() -> Dict:
+    """Provenance stamped into every artifact so baseline diffs in CI are
+    attributable: git sha, jax version, backend, UTC timestamp."""
+    meta = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())}
+    try:
+        meta["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(__file__), timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        meta["git_sha"] = "unknown"
+    try:
+        import jax
+
+        meta["jax_version"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+    except Exception:
+        meta["jax_version"] = meta["backend"] = "unknown"
+    return meta
+
+
+def save_artifact(name: str, payload: Dict, *,
+                  directory: Optional[str] = None) -> str:
+    directory = directory or ARTIFACTS
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, name + ".json")
+    out = dict(payload)            # callers keep iterating their own dict
+    out["_meta"] = artifact_meta()
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+        json.dump(out, f, indent=1, default=float)
     return path
+
+
+# ---------------------------------------------------------------------------
+# baseline-regression gate
+#
+# Fresh artifacts/*.json are compared against the committed baselines/*.json.
+# Ratio metrics ("speedup*") are machine-portable and always gated: fresh
+# must stay >= baseline * (1 - tolerance).  Absolute wall-clock metrics
+# ("t_*", "*_s") are only gated when include_times=True (CI machines are not
+# the machine that recorded the baseline, so absolute-time gating is an
+# opt-in for like-for-like hardware): fresh must stay <= base * (1 + tol).
+# "_meta" provenance never participates.
+# ---------------------------------------------------------------------------
+
+def _is_time_key(key: str) -> bool:
+    # throughput rates ("cols_per_s") are higher-is-better and machine
+    # bound — they are not wall-clock times and are not gated
+    if key.endswith("_per_s"):
+        return False
+    return key.startswith("t_") or key.endswith("_s")
+
+
+def _is_ratio_key(key: str) -> bool:
+    # machine-portable higher-is-better metrics: batching speedups and the
+    # packed-storage memory compression factor (dense bytes / store bytes)
+    return (key == "speedup" or key.endswith("_speedup")
+            or key == "mem_ratio")
+
+
+def _walk(base, fresh, path: str, tolerance: float, include_times: bool,
+          out: List[Dict]) -> None:
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            out.append({"path": path, "kind": "missing",
+                        "detail": "baseline section absent from artifact"})
+            return
+        for key, bval in base.items():
+            if key == "_meta":
+                continue
+            if key not in fresh:
+                out.append({"path": f"{path}.{key}", "kind": "missing",
+                            "detail": "metric absent from fresh artifact"})
+                continue
+            _walk(bval, fresh[key], f"{path}.{key}", tolerance,
+                  include_times, out)
+        return
+    if not isinstance(base, (int, float)) or isinstance(base, bool):
+        return
+    key = path.rsplit(".", 1)[-1]
+    if _is_ratio_key(key):
+        floor = base * (1.0 - tolerance)
+        if fresh < floor:
+            out.append({"path": path, "kind": "ratio-regression",
+                        "baseline": base, "fresh": fresh,
+                        "detail": f"{fresh:.3f} < floor {floor:.3f} "
+                                  f"(baseline {base:.3f}, tol {tolerance:.0%})"})
+    elif include_times and _is_time_key(key):
+        ceil = base * (1.0 + tolerance)
+        if fresh > ceil:
+            out.append({"path": path, "kind": "time-regression",
+                        "baseline": base, "fresh": fresh,
+                        "detail": f"{fresh:.4f}s > ceiling {ceil:.4f}s "
+                                  f"(baseline {base:.4f}s, tol {tolerance:.0%})"})
+
+
+def check_baselines(*, artifacts_dir: Optional[str] = None,
+                    baseline_dir: Optional[str] = None,
+                    tolerance: float = 0.25,
+                    include_times: bool = False) -> List[Dict]:
+    """Compare every committed baseline against its fresh artifact.
+
+    Returns a list of violation records (empty == gate passes); a baseline
+    whose artifact was never produced is itself a violation, so wiring rot
+    fails loudly.
+    """
+    artifacts_dir = artifacts_dir or ARTIFACTS
+    baseline_dir = baseline_dir or BASELINES
+    violations: List[Dict] = []
+    names = sorted(f for f in os.listdir(baseline_dir)
+                   if f.endswith(".json")) if os.path.isdir(baseline_dir) else []
+    if not names:
+        return [{"path": baseline_dir, "kind": "missing",
+                 "detail": "no committed baselines found"}]
+    for fname in names:
+        fresh_path = os.path.join(artifacts_dir, fname)
+        with open(os.path.join(baseline_dir, fname)) as f:
+            base = json.load(f)
+        if not os.path.exists(fresh_path):
+            violations.append({"path": fname, "kind": "missing",
+                               "detail": "fresh artifact was not produced"})
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        _walk(base, fresh, fname.removesuffix(".json"), tolerance,
+              include_times, violations)
+    return violations
 
 
 def load_datasets(codes: Iterable[str] | None = None):

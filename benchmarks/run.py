@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run --only speedup,space
+    PYTHONPATH=src python -m benchmarks.run --check-baseline
 
 Paper-figure map:
   workload     -> Fig 3   (per-source workload growth)
@@ -11,9 +12,16 @@ Paper-figure map:
   space        -> Figs 13/14/16 + Tables II/III (memory management)
   supernode    -> §"supernode detection" (streamed fingerprints vs post-pass)
   numeric      -> DESIGN.md §4 (supernodal numeric LU vs column-at-a-time)
+  solve        -> DESIGN.md §9 (packed CSC-panel storage + solve/refinement)
   roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
+
+``--check-baseline`` is the CI regression gate: fresh ``artifacts/*.json``
+are compared against the committed ``baselines/*.json``.  Machine-portable
+ratio metrics (speedups) are gated at ``--tolerance`` (default 25%); absolute
+times participate only with ``--check-times`` (opt-in for like-for-like
+hardware).  Exits nonzero on any regression.
 """
 from __future__ import annotations
 
@@ -22,15 +30,47 @@ import sys
 import time
 
 
+def check_baseline(tolerance: float, include_times: bool,
+                   baseline_dir: str | None) -> None:
+    from benchmarks.common import check_baselines
+
+    violations = check_baselines(baseline_dir=baseline_dir,
+                                 tolerance=tolerance,
+                                 include_times=include_times)
+    if not violations:
+        print(f"baseline gate: OK (tolerance {tolerance:.0%}, "
+              f"times {'included' if include_times else 'excluded'})")
+        return
+    print(f"baseline gate: {len(violations)} violation(s)")
+    for v in violations:
+        print(f"  [{v['kind']}] {v['path']}: {v['detail']}")
+    sys.exit(1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="compare fresh artifacts against committed "
+                         "baselines and exit nonzero on regression")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative drift for gated metrics")
+    ap.add_argument("--check-times", action="store_true",
+                    help="also gate absolute wall-clock metrics (only "
+                         "meaningful on the hardware that recorded the "
+                         "baselines)")
+    ap.add_argument("--baseline-dir", default=None)
     args = ap.parse_args()
+
+    if args.check_baseline:
+        check_baseline(args.tolerance, args.check_times, args.baseline_dir)
+        return
+
     only = set(filter(None, args.only.split(",")))
 
     from benchmarks import (bench_balance, bench_concurrency, bench_numeric,
-                            bench_space, bench_speedup, bench_supernode,
-                            bench_workload, roofline)
+                            bench_solve, bench_space, bench_speedup,
+                            bench_supernode, bench_workload, roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
@@ -39,6 +79,7 @@ def main() -> None:
         ("space", bench_space.main),
         ("supernode", bench_supernode.main),
         ("numeric", bench_numeric.main),
+        ("solve", bench_solve.main),
         ("roofline", roofline.main),
     ]
     failures = []

@@ -7,17 +7,22 @@ configs + launch (architectures, production mesh, dry-run drivers).
 
 The end-to-end sparse LU entry points are re-exported lazily::
 
-    from repro import symbolic_factorize, numeric_factorize
+    from repro import solve, symbolic_factorize, numeric_factorize
     sym = symbolic_factorize(a, detect_supernodes=True)
-    num = numeric_factorize(a, sym)
+    num = numeric_factorize(a, sym)     # O(nnz(L+U)) packed factors
+    res = solve(a, b, sym=sym)          # x + relative-residual history
 """
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
 _LAZY_EXPORTS = {
     "symbolic_factorize": "repro.core.symbolic",
     "SymbolicResult": "repro.core.symbolic",
     "numeric_factorize": "repro.numeric",
     "NumericResult": "repro.numeric",
+    "solve": "repro.numeric",
+    "SolveResult": "repro.numeric",
+    "PanelStore": "repro.numeric",
+    "CSCPattern": "repro.numeric",
     "ZeroPivotError": "repro.sparse.numeric",
     "CSRMatrix": "repro.sparse",
 }

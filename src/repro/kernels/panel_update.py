@@ -8,9 +8,12 @@ ancestor columns:
 
 with ``acc`` the (M, N) gathered target panel rows, ``L`` the (M, K) gathered
 L-panel of all ancestor supernodes, and ``U`` the (K, N) solved U-rows of
-those ancestors against J.  Sparse LU spends almost all of its numeric flops
-here, and the supernode panel shapes are exactly what the 128 x 128 MXU
-wants (GLU3.0-style batched dense updates).
+those ancestors against J.  All three operands are packed dense blocks
+assembled from the CSC-panel store's row-index maps (``numeric/storage.py``
+— the caller never slices an (n, n) array), and the output writes straight
+back into the target panel's packed block.  Sparse LU spends almost all of
+its numeric flops here, and the supernode panel shapes are exactly what the
+128 x 128 MXU wants (GLU3.0-style batched dense updates).
 
 Blocking follows the same VREG/MXU idiom as ``supernode_fp.py`` /
 ``gsofa_relax.py``: float32 tiles with the second-to-last dim a multiple of 8

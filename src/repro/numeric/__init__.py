@@ -1,21 +1,31 @@
-"""Supernodal numeric LU consuming the symbolic panel partition.
+"""Supernodal numeric LU + solver consuming the symbolic panel partition.
 
-Pipeline (DESIGN.md §4): ``symbolic_factorize(a, detect_supernodes=True)``
+Pipeline (DESIGN.md §4, §9): ``symbolic_factorize(a, detect_supernodes=True)``
 predicts the L/U structure and the supernode ranges -> schedule.py condenses
 the column dependencies onto panels (ancestor lists + dependency levels +
-``pack_panels`` bins) -> supernodal.py factorizes panel-by-panel with
-accumulated dense GEMM updates (Pallas MXU kernel
-``kernels/panel_update.py`` on TPU, float64 BLAS by default).
+``pack_panels`` bins) -> storage.py allocates one packed (rows_J, w_J) block
+per panel straight from the prediction (O(nnz(L+U)) working memory, no dense
+(n, n) scratch) -> supernodal.py factorizes panel-by-panel with accumulated
+dense GEMM updates on the packed blocks (Pallas MXU kernel
+``kernels/panel_update.py`` on TPU, float64 BLAS by default) -> solve.py runs
+supernodal triangular substitution + iterative refinement on the factors.
 
-    from repro import numeric_factorize, symbolic_factorize
+    from repro import solve, symbolic_factorize
     sym = symbolic_factorize(a, detect_supernodes=True)
-    num = numeric_factorize(a, sym)          # num.l @ num.u == A (on pattern)
+    res = solve(a, b, sym=sym)               # ||A res.x - b|| / ||b|| <= 1e-10
 
 ``sparse/numeric.py::lu_nopivot`` remains the dense test oracle;
 ``factorize_columns`` is the column-at-a-time baseline the benchmark
 (``benchmarks/bench_numeric.py``) compares against.
 """
 from repro.numeric.schedule import PanelSchedule, build_schedule
+from repro.numeric.solve import (
+    SolveResult, SolveSchedule, backward_substitute, build_solve_schedule,
+    forward_substitute, solve, solve_factored,
+)
+from repro.numeric.storage import (
+    CSCPattern, PanelStore, uniform_supernodes,
+)
 from repro.numeric.supernodal import (
     NumericResult, factorize_columns, numeric_factorize,
 )
@@ -23,6 +33,9 @@ from repro.sparse.numeric import ZeroPivotError
 
 __all__ = [
     "PanelSchedule", "build_schedule",
+    "CSCPattern", "PanelStore", "uniform_supernodes",
     "NumericResult", "factorize_columns", "numeric_factorize",
+    "SolveResult", "SolveSchedule", "build_solve_schedule",
+    "forward_substitute", "backward_substitute", "solve", "solve_factored",
     "ZeroPivotError",
 ]

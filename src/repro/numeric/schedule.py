@@ -8,7 +8,9 @@ structural nonzero in the U block ``U(K, J)`` (rows of K, columns of J):
 exactly then does K's L panel update J.  That is the supernodal elimination
 DAG (the condensation of the column etree onto supernodes).
 
-``build_schedule`` derives, from the dense predicted pattern:
+``build_schedule`` derives, from the predicted pattern (dense bool (n, n)
+or the sparse ``storage.CSCPattern`` — the sparse form is what the
+O(nnz(L+U)) packed path feeds it, nothing here materializes (n, n)):
 
 * ``ancestors[j]`` — the update list of panel j (ascending supernode ids);
   left-looking consumes it in order: solve ``U(K, J)`` against L(K, K),
@@ -29,6 +31,7 @@ from typing import List
 
 import numpy as np
 
+from repro.numeric.storage import CSCPattern
 from repro.supernodes.balance import PanelPartition, pack_panels
 
 
@@ -81,31 +84,31 @@ def _validate_supernodes(supernodes: np.ndarray, n: int) -> np.ndarray:
     return supernodes
 
 
-def build_schedule(pattern: np.ndarray, supernodes: np.ndarray, *,
+def build_schedule(pattern, supernodes: np.ndarray, *,
                    n_bins: int = 8, policy: str = "lpt") -> PanelSchedule:
-    """Schedule from the dense predicted L+U pattern and supernode ranges.
+    """Schedule from the predicted L+U pattern and supernode ranges.
 
-    ``pattern``: (n, n) bool, True on every structural nonzero of L+U
-    (diagonal included) — what ``core.gsofa.dense_pattern`` returns.
+    ``pattern``: dense (n, n) bool (diagonal included — what
+    ``core.gsofa.dense_pattern`` returns) or a ``storage.CSCPattern``; the
+    sparse form keeps scheduling O(nnz(L+U)) for the packed storage path.
     ``n_bins``: pack_panels bin count for within-level grouping (clamped to
     the panel count so small problems don't over-provision).
     """
-    pattern = np.asarray(pattern, dtype=bool)
-    n = pattern.shape[0]
+    if not isinstance(pattern, CSCPattern):
+        pattern = CSCPattern.from_dense(pattern)
+    n = pattern.n
     supernodes = _validate_supernodes(supernodes, n)
     k = len(supernodes)
 
     sup_of_col = np.repeat(np.arange(k, dtype=np.int64),
                            supernodes[:, 1] - supernodes[:, 0])
-    ids = np.arange(n)
-    col_counts = (pattern & (ids[:, None] > ids[None, :])).sum(
-        axis=0).astype(np.int64)
+    col_counts = pattern.below_diag_counts()
 
     ancestors: List[np.ndarray] = []
     level = np.zeros(k, dtype=np.int64)
     for j, (s, e) in enumerate(supernodes):
-        rows = np.flatnonzero(pattern[:s, s:e].any(axis=1))
-        anc = np.unique(sup_of_col[rows])
+        seg = pattern.rowind[pattern.indptr[s]:pattern.indptr[e]]
+        anc = np.unique(sup_of_col[seg[seg < s]])
         ancestors.append(anc)
         level[j] = level[anc].max() + 1 if len(anc) else 0
 

@@ -1,0 +1,283 @@
+"""CSC-panel working storage for the supernodal numeric LU (DESIGN.md §9).
+
+The symbolic phase predicts the filled L+U structure, so numeric working
+memory can be allocated *from that prediction* instead of as a dense (n, n)
+scratch matrix (GLU3.0-style compressed panel storage): one contiguous
+``(rows_J, w_J)`` float64 block per supernode panel J = [s, e), holding every
+structural row of the panel's columns — U rows above the diagonal block, the
+packed L\\U diagonal block, and the below-panel L rows:
+
+    global rows          local layout of ``blocks[j]`` (sorted ascending)
+    r0 < r1 < ... < s    [0 : diag[j]]          U(r, J) rows of ancestors
+    s .. e-1             [diag[j] : diag[j]+w]  diagonal block (L\\U packed)
+    rk > ... > e-1       [diag[j]+w : ]         below-panel L(r, J) rows
+
+Peak working memory is O(nnz(L+U)) plus the per-panel row padding (a column
+stores the *union* of the panel's row patterns, exactly like relaxed T3
+supernode merges pad the dense path), which lifts the numeric size ceiling
+from n ≲ few thousand (dense scratch) to n in the tens of thousands.
+
+Row-index maps: panel rows are kept sorted, so a gather of arbitrary global
+rows out of a panel is one ``searchsorted`` + validity mask (absent rows are
+structural zeros and gather as 0.0) — this is how ancestor-panel gathers feed
+the accumulated Pallas GEMM (``kernels/panel_update.py``) with dense packed
+operands without ever slicing an n×n array.
+
+``CSCPattern`` is the sparse (per-column rows) form of the predicted L+U
+pattern that the store and the scheduler consume; ``to_dense`` /
+``dense_lu`` are *test/oracle* helpers — nothing on the factorization or
+solve path materializes (n, n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSCPattern:
+    """Per-column structural rows of the predicted L+U pattern.
+
+    ``indptr``/``rowind`` follow compressed-sparse-column convention: column
+    j's rows are ``rowind[indptr[j]:indptr[j+1]]``, strictly ascending.  The
+    diagonal is always present (``with_diagonal`` enforces it), matching the
+    dense path's ``np.fill_diagonal(pattern, True)``.
+    """
+
+    n: int
+    indptr: np.ndarray   # (n+1,) int64
+    rowind: np.ndarray   # (nnz,) int64, sorted within each column
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    def col(self, j: int) -> np.ndarray:
+        return self.rowind[self.indptr[j]:self.indptr[j + 1]]
+
+    @classmethod
+    def from_dense(cls, pattern: np.ndarray) -> "CSCPattern":
+        """From a dense bool (n, n) pattern (diagonal forced True)."""
+        pattern = np.asarray(pattern, dtype=bool).copy()
+        n = pattern.shape[0]
+        if pattern.shape != (n, n):
+            raise ValueError(f"pattern must be square, got {pattern.shape}")
+        np.fill_diagonal(pattern, True)
+        cols, rows = np.nonzero(pattern.T)      # column-major order
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(indptr, cols + 1, 1)
+        return cls(n=n, indptr=np.cumsum(indptr),
+                   rowind=rows.astype(np.int64))
+
+    @classmethod
+    def banded(cls, n: int, lower: int, upper: Optional[int] = None
+               ) -> "CSCPattern":
+        """Full-band pattern: column j holds rows [j-upper, j+lower] clipped.
+
+        The filled pattern of a dense-band matrix *is* its band (no-pivot LU
+        of bandwidth (p, q) fills nothing outside it), so this doubles as
+        the exact symbolic prediction for ``sparse.matrices.banded_full``.
+        """
+        if upper is None:
+            upper = lower
+        js = np.arange(n, dtype=np.int64)
+        lo = np.maximum(js - upper, 0)
+        hi = np.minimum(js + lower, n - 1)
+        counts = hi - lo + 1
+        indptr = np.concatenate([[0], np.cumsum(counts)])
+        rowind = np.concatenate([np.arange(a, b + 1)
+                                 for a, b in zip(lo, hi)]).astype(np.int64)
+        return cls(n=n, indptr=indptr, rowind=rowind)
+
+    def with_diagonal(self) -> "CSCPattern":
+        """Self if every diagonal entry is present, else a copy that adds
+        the missing ones (the dense path's fill_diagonal contract)."""
+        col_of = np.repeat(np.arange(self.n, dtype=np.int64),
+                           np.diff(self.indptr))
+        has_diag = np.zeros(self.n, dtype=bool)
+        has_diag[col_of[self.rowind == col_of]] = True
+        missing = np.flatnonzero(~has_diag)
+        if not len(missing):
+            return self
+        rows = np.concatenate([self.rowind, missing])
+        cols = np.concatenate([col_of, missing])
+        order = np.lexsort((rows, cols))
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(indptr, cols + 1, 1)
+        return CSCPattern(n=self.n, indptr=np.cumsum(indptr),
+                          rowind=rows[order])
+
+    def below_diag_counts(self) -> np.ndarray:
+        """(n,) strictly-below-diagonal count per column (pack weights)."""
+        col_of = np.repeat(np.arange(self.n, dtype=np.int64),
+                           np.diff(self.indptr))
+        return np.bincount(col_of[self.rowind > col_of],
+                           minlength=self.n).astype(np.int64)
+
+    def to_dense(self) -> np.ndarray:
+        """Dense bool (n, n) — test helper only."""
+        out = np.zeros((self.n, self.n), dtype=bool)
+        col_of = np.repeat(np.arange(self.n), np.diff(self.indptr))
+        out[self.rowind, col_of] = True
+        return out
+
+
+def uniform_supernodes(n: int, width: int) -> np.ndarray:
+    """Contiguous fixed-width panel partition [0,w), [w,2w), ... covering n
+    — for driving the packed path when no detector output is available
+    (padding makes any contiguous partition valid, like T3 merges)."""
+    if width <= 0:
+        raise ValueError(f"panel width must be positive, got {width}")
+    starts = np.arange(0, n, width, dtype=np.int64)
+    ends = np.minimum(starts + width, n)
+    return np.stack([starts, ends], axis=1)
+
+
+class PanelStore:
+    """Packed CSC-panel working storage: one (rows_J, w_J) block per panel.
+
+    Attributes
+    ----------
+    supernodes : (k, 2) int64 — contiguous [start, end) column ranges.
+    rows : per-panel sorted global row ids; the diagonal rows s..e-1 are
+        always present, so ``rows[j][diag[j]:diag[j]+w]`` == arange(s, e).
+    blocks : per-panel (len(rows[j]), w_j) float64 values (L\\U packed).
+    in_pattern : per-panel bool mask of which block slots are in the
+        *per-column* predicted pattern — False slots are panel padding
+        (union rows / forced diagonal), kept explicitly zero.
+    sup_of_col : (n,) panel id of every column (row-index map helper).
+    """
+
+    def __init__(self, pattern: CSCPattern, supernodes: np.ndarray):
+        supernodes = np.asarray(supernodes, dtype=np.int64)
+        self.n = pattern.n
+        self.pattern = pattern
+        self.supernodes = supernodes
+        k = len(supernodes)
+        widths = supernodes[:, 1] - supernodes[:, 0]
+        self.sup_of_col = np.repeat(np.arange(k, dtype=np.int64), widths)
+        self.rows: List[np.ndarray] = []
+        self.blocks: List[np.ndarray] = []
+        self.in_pattern: List[np.ndarray] = []
+        self.diag = np.zeros(k, dtype=np.int64)
+        for j, (s, e) in enumerate(supernodes):
+            seg = pattern.rowind[pattern.indptr[s]:pattern.indptr[e]]
+            rows = np.unique(np.concatenate([seg, np.arange(s, e)]))
+            block = np.zeros((len(rows), e - s), dtype=np.float64)
+            mask = np.zeros((len(rows), e - s), dtype=bool)
+            for c in range(s, e):
+                idx = np.searchsorted(rows, pattern.col(c))
+                mask[idx, c - s] = True
+            self.rows.append(rows)
+            self.blocks.append(block)
+            self.in_pattern.append(mask)
+            self.diag[j] = np.searchsorted(rows, s)
+
+    # -- sizing ------------------------------------------------------------
+    @property
+    def n_panels(self) -> int:
+        return len(self.supernodes)
+
+    @property
+    def total_entries(self) -> int:
+        """Allocated float64 slots across all panel blocks (incl. padding)."""
+        return int(sum(b.size for b in self.blocks))
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(b.nbytes for b in self.blocks))
+
+    @property
+    def pad_entries(self) -> int:
+        """Slots outside the per-column pattern (panel-union padding)."""
+        return int(self.total_entries - self.pattern.nnz)
+
+    # -- value scatter ------------------------------------------------------
+    def set_dense(self, values: np.ndarray) -> float:
+        """Scatter a dense (n, n) values matrix (legacy path).  Returns the
+        largest |value| at a position *not* covered by the store — nonzero
+        there means the input escapes the symbolic prediction."""
+        values = np.asarray(values, dtype=np.float64)
+        covered = np.zeros_like(values, dtype=bool)
+        for j, (s, e) in enumerate(self.supernodes):
+            self.blocks[j][...] = values[self.rows[j], s:e]
+            covered[self.rows[j], s:e] = True
+        dropped = values[~covered]
+        return float(np.abs(dropped).max()) if dropped.size else 0.0
+
+    def set_csr(self, a, values: np.ndarray) -> float:
+        """Scatter CSR-aligned values (``values[p]`` pairs ``a.indices[p]``;
+        sparse path — never touches (n, n)).  Returns the largest |value|
+        whose (row, col) slot is absent from the store."""
+        values = np.asarray(values, dtype=np.float64)
+        if values.shape != (a.nnz,):
+            raise ValueError(f"CSR values must be ({a.nnz},), got "
+                             f"{values.shape}")
+        rows_a = np.repeat(np.arange(a.n, dtype=np.int64),
+                           np.diff(a.indptr))
+        cols_a = a.indices.astype(np.int64)
+        dropped = 0.0
+        order = np.argsort(self.sup_of_col[cols_a], kind="stable")
+        ra, ca, va = rows_a[order], cols_a[order], values[order]
+        bounds = np.searchsorted(self.sup_of_col[ca],
+                                 np.arange(self.n_panels + 1))
+        for j, (s, e) in enumerate(self.supernodes):
+            lo, hi = bounds[j], bounds[j + 1]
+            if lo == hi:
+                continue
+            idx_c, hit = self.local_rows(j, ra[lo:hi])
+            self.blocks[j][idx_c[hit], ca[lo:hi][hit] - s] = va[lo:hi][hit]
+            if not hit.all():
+                dropped = max(dropped, float(np.abs(va[lo:hi][~hit]).max()))
+        return dropped
+
+    # -- row-index-mapped gathers -------------------------------------------
+    def local_rows(self, j: int, take: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """(local index, hit mask) of global rows ``take`` in panel j."""
+        rows = self.rows[j]
+        idx = np.searchsorted(rows, take)
+        idx_c = np.minimum(idx, len(rows) - 1)
+        return idx_c, rows[idx_c] == take
+
+    def gather_rows(self, j: int, take: np.ndarray) -> np.ndarray:
+        """(len(take), w_j) dense gather of panel j at global rows ``take``;
+        rows absent from the panel's structure are structural zeros."""
+        idx, hit = self.local_rows(j, take)
+        out = np.zeros((len(take), self.blocks[j].shape[1]),
+                       dtype=np.float64)
+        out[hit] = self.blocks[j][idx[hit]]
+        return out
+
+    # -- pattern-padding bookkeeping ---------------------------------------
+    def padding_max(self) -> float:
+        """Largest |value| sitting on a padded (out-of-pattern) slot."""
+        worst = 0.0
+        for block, mask in zip(self.blocks, self.in_pattern):
+            pad = block[~mask]
+            if pad.size:
+                worst = max(worst, float(np.abs(pad).max()))
+        return worst
+
+    def zero_padding(self) -> None:
+        for block, mask in zip(self.blocks, self.in_pattern):
+            block[~mask] = 0.0
+
+    # -- dense reconstruction (test/oracle helpers) -------------------------
+    def to_dense(self) -> np.ndarray:
+        """Dense (n, n) L\\U working matrix — test helper; the factorization
+        and solve paths never call this."""
+        out = np.zeros((self.n, self.n), dtype=np.float64)
+        for j, (s, e) in enumerate(self.supernodes):
+            out[self.rows[j], s:e] = self.blocks[j]
+        return out
+
+    def dense_lu(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(unit-lower L, upper U) dense factors — for the oracle-parity
+        tests (`NumericResult.l` / `.u`)."""
+        m = self.to_dense()
+        l = np.tril(m, -1) + np.eye(self.n)
+        u = np.triu(m)
+        return l, u

@@ -1,13 +1,15 @@
-"""Supernodal left-looking numeric LU consuming the panel partition
-(DESIGN.md §4).
+"""Supernodal left-looking numeric LU on packed CSC-panel storage
+(DESIGN.md §4, storage layout §9).
 
 This is the step the symbolic phase exists to feed: ``CSRMatrix`` values plus
 a ``SymbolicResult`` (counts, supernodes) in, unit-lower L and upper U out,
-factorized panel-by-panel:
+factorized panel-by-panel **directly in O(nnz(L+U)) packed storage**
+(``storage.PanelStore``) — no dense (n, n) working matrix:
 
-* **Panel gather** — each supernode J = [s, e) is a dense (rows, w) block;
-  the gathered structural rows of L(s:, J) and the ancestor U rows live as
-  contiguous dense operands, which is what dense hardware wants (GLU3.0-style
+* **Panel gather** — each supernode J = [s, e) owns one contiguous
+  (rows_J, w) block; ancestor U rows and L panels are gathered into dense
+  operands through the store's sorted row-index maps (absent rows are
+  structural zeros), which is what dense hardware wants (GLU3.0-style
   batched updates; structure-aware blocking per arXiv:2512.04389).
 * **Left-looking updates** — ancestors K of J (supernodes with a structural
   ``U(K, J)`` block, schedule.py) are consumed in ascending order: solve
@@ -15,7 +17,8 @@ factorized panel-by-panel:
   rows of *later* ancestors, and **defer the whole trailing update to one
   accumulated GEMM** ``X(s:, J) -= L(s:, anc) @ U(anc, J)`` over the gathered
   ancestor columns — the MXU panel-update kernel
-  (``kernels/panel_update.py``; numpy float64 BLAS on the default backend).
+  (``kernels/panel_update.py``; numpy float64 BLAS on the default backend)
+  reads and writes the packed blocks.
 * **Panel factor** — dense no-pivot LU of the diagonal block (raising
   ``ZeroPivotError`` with the global column on zero/near-zero pivots), then
   one triangular solve for the below-panel L rows.
@@ -25,16 +28,19 @@ factorized panel-by-panel:
   policy (LPT vs contiguous) because per-panel math never reads same-level
   data.
 
-Structural exactness: updates and solves are restricted to the structural
-rows of the predicted pattern, so entries outside the symbolic prediction
-are *exactly* zero except under relaxed (T3) merges, where the explicit-zero
-padding of a panel is bounded by ``pattern_tol`` and zeroed (anything larger
-escaping the pattern raises — that would be a symbolic bug, the
-``validate_symbolic`` contract).
+Structural exactness: updates and solves only ever touch the structural rows
+of the predicted pattern, so entries outside the symbolic prediction are
+*exactly* zero except at a panel's explicit-zero padding (union rows /
+relaxed T3 merges), which is bounded by ``pattern_tol`` and zeroed —
+anything larger escaping the pattern raises (that would be a symbolic bug,
+the ``validate_symbolic`` contract).  Updates that would land on a row
+absent from the target panel's structure are tracked the same way instead
+of being silently dropped.
 
-``sparse/numeric.py::lu_nopivot`` stays the dense O(n^2) test oracle;
-``factorize_columns`` here is the honest column-at-a-time sparse baseline
-the benchmark compares against.
+``sparse/numeric.py::lu_nopivot`` stays the dense O(n^2) test oracle
+(``NumericResult.l`` / ``.u`` reconstruct dense factors on demand so the
+parity tests stay bitwise-meaningful); ``factorize_columns`` is the honest
+column-at-a-time sparse baseline the benchmark compares against.
 """
 from __future__ import annotations
 
@@ -46,9 +52,11 @@ import numpy as np
 from scipy.linalg import solve_triangular
 
 from repro.numeric.schedule import PanelSchedule, build_schedule
+from repro.numeric.storage import CSCPattern, PanelStore
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import (
-    check_pivot, generic_values, lu_inplace, pivot_tolerance,
+    check_pivot, generic_values, generic_values_csr, lu_inplace,
+    pivot_tolerance,
 )
 
 _BACKENDS = ("numpy", "kernel")
@@ -56,17 +64,23 @@ _BACKENDS = ("numpy", "kernel")
 
 @dataclasses.dataclass
 class NumericResult:
-    """Factors + scheduling/perf counters of one supernodal factorization."""
+    """Factors + scheduling/perf counters of one supernodal factorization.
+
+    The factors live in packed CSC-panel storage (``store``); ``l``/``u``
+    are dense reconstructions materialized on demand for oracle-parity
+    tests and small-n consumers — do not touch them at large n.
+    """
 
     n: int
-    l: np.ndarray                # (n, n) float64, unit lower (diag = 1)
-    u: np.ndarray                # (n, n) float64, upper incl. diagonal
+    store: PanelStore
     schedule: PanelSchedule
     backend: str
     elapsed_s: float
     n_updates: int               # ancestor panel updates consumed
     gemm_flops: int              # flops of the accumulated trailing GEMMs
     outside_max: float           # largest |value| found outside the pattern
+    _dense_lu: Optional[Tuple[np.ndarray, np.ndarray]] = \
+        dataclasses.field(default=None, repr=False)
 
     @property
     def n_supernodes(self) -> int:
@@ -75,6 +89,26 @@ class NumericResult:
     @property
     def n_levels(self) -> int:
         return self.schedule.n_levels
+
+    @property
+    def store_entries(self) -> int:
+        """Allocated packed slots — O(nnz(L+U)), the whole point."""
+        return self.store.total_entries
+
+    def _dense(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._dense_lu is None:
+            self._dense_lu = self.store.dense_lu()
+        return self._dense_lu
+
+    @property
+    def l(self) -> np.ndarray:
+        """Dense unit-lower L — test/oracle reconstruction helper."""
+        return self._dense()[0]
+
+    @property
+    def u(self) -> np.ndarray:
+        """Dense upper U — test/oracle reconstruction helper."""
+        return self._dense()[1]
 
     def reconstruct(self) -> np.ndarray:
         """L @ U — for residual checks against the assembled matrix."""
@@ -97,15 +131,21 @@ def _solve_upper_right(block: np.ndarray, rhs: np.ndarray) -> np.ndarray:
                             check_finite=False).T
 
 
-def _factor_panel(m: np.ndarray, pattern: np.ndarray, schedule: PanelSchedule,
-                  j: int, piv_tol: float, backend: str) -> Tuple[int, int]:
-    """Factor panel j in place; returns (#ancestor updates, trailing flops)."""
+def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
+                  piv_tol: float, backend: str) -> Tuple[int, int, float]:
+    """Factor panel j in place on its packed block.
+
+    Returns (#ancestor updates, trailing flops, largest |value| the solves
+    produced on a row absent from the panel's structure — nonzero beyond
+    roundoff means symbolic under-prediction).
+    """
     s, e = schedule.supernodes[j]
     w = e - s
-    cols = np.arange(s, e)
     anc = schedule.ancestors[j]
-    rows_below = s + np.flatnonzero(pattern[s:, s:e].any(axis=1))
+    block = store.blocks[j]
+    d = int(store.diag[j])
     flops = 0
+    dropped = 0.0
 
     if len(anc):
         widths = schedule.supernodes[anc, 1] - schedule.supernodes[anc, 0]
@@ -113,59 +153,78 @@ def _factor_panel(m: np.ndarray, pattern: np.ndarray, schedule: PanelSchedule,
         anc_rows = np.concatenate([np.arange(ks, ke)
                                    for ks, ke in schedule.supernodes[anc]])
 
-        # 1. gather the ancestor sub-matrix and target rows into dense blocks
-        #    ONCE; the ascending per-ancestor solves + rank-|K| updates then
-        #    run on contiguous slices (non-ancestor rows above s are exact
-        #    zeros — never touched)
-        lsub = m[np.ix_(anc_rows, anc_rows)]          # (K, K) gathered L
-        b = m[np.ix_(anc_rows, cols)]                 # (K, w) gathered X rows
-        for idx in range(len(anc)):
+        # 1. ascending per-ancestor solves + rank-|K| updates on the gathered
+        #    target rows; each ancestor's L strip (its own diagonal block +
+        #    the later ancestor rows) is gathered through the row-index maps
+        #    only while in use, so working memory stays O(K * max_w) — never
+        #    a dense (K, K) ancestor sub-matrix (rows absent from a panel's
+        #    structure gather as exact zeros)
+        b = store.gather_rows(j, anc_rows)            # (K, w) gathered X rows
+        for idx, k in enumerate(anc):
             r0, r1 = offs[idx], offs[idx + 1]
-            b[r0:r1] = _solve_unit_lower(lsub[r0:r1, r0:r1], b[r0:r1])
+            strip = store.gather_rows(int(k), anc_rows[r0:])
+            b[r0:r1] = _solve_unit_lower(strip[:r1 - r0], b[r0:r1])
             if r1 < len(anc_rows):
-                b[r1:] -= lsub[r1:, r0:r1] @ b[r0:r1]
-        m[np.ix_(anc_rows, cols)] = b                 # solved U(anc, J)
+                b[r1:] -= strip[r1 - r0:] @ b[r0:r1]
+        idx_j, hit_j = store.local_rows(j, anc_rows)  # solved U(anc, J)
+        block[idx_j[hit_j]] = b[hit_j]
+        if not hit_j.all():
+            miss = np.abs(b[~hit_j])
+            if miss.size:
+                dropped = float(miss.max())
 
         # 2. accumulated trailing update: one GEMM over the gathered ancestor
-        #    L panel against the solved U rows (MXU kernel on TPU)
-        lp = m[np.ix_(rows_below, anc_rows)]
-        acc = m[np.ix_(rows_below, cols)]
+        #    L panels against the solved U rows (MXU kernel on TPU), writing
+        #    straight back into the packed block rows >= s
+        below = store.rows[j][d:]
+        lp = np.empty((len(below), len(anc_rows)), dtype=np.float64)
+        for idx, k in enumerate(anc):
+            lp[:, offs[idx]:offs[idx + 1]] = store.gather_rows(int(k), below)
+        acc = block[d:]
         if backend == "kernel":
             from repro.kernels import ops as kops
 
             upd = np.asarray(kops.panel_update(acc, lp, b), dtype=np.float64)
         else:
             upd = acc - lp @ b
-        m[np.ix_(rows_below, cols)] = upd
-        flops = 2 * len(rows_below) * len(anc_rows) * w
+        block[d:] = upd
+        flops = 2 * len(below) * len(anc_rows) * w
 
     # 3. diagonal-block factor + below-panel triangular solve
-    lu_inplace(m[s:e, s:e], piv_tol, col0=s)
-    rows_gt = rows_below[rows_below >= e]
-    if len(rows_gt):
-        m[np.ix_(rows_gt, cols)] = _solve_upper_right(
-            m[s:e, s:e], m[np.ix_(rows_gt, cols)])
-    return len(anc), flops
+    lu_inplace(block[d:d + w], piv_tol, col0=s)
+    if block.shape[0] > d + w:
+        block[d + w:] = _solve_upper_right(block[d:d + w], block[d + w:])
+    return len(anc), flops, dropped
 
 
 def numeric_factorize(a: CSRMatrix, sym=None, *,
                       values: Optional[np.ndarray] = None,
-                      pattern: Optional[np.ndarray] = None,
+                      pattern=None,
+                      supernodes: Optional[np.ndarray] = None,
                       n_bins: int = 8, policy: str = "lpt",
                       backend: str = "numpy",
                       piv_tol: Optional[float] = None,
                       check_pattern: bool = True,
                       pattern_tol: Optional[float] = None) -> NumericResult:
-    """Supernodal left-looking LU of ``values`` on A's structure.
+    """Supernodal left-looking LU of ``values`` on A's structure, factored
+    in O(nnz(L+U)) packed CSC-panel storage.
 
     ``a``: structural CSR; ``sym``: a ``SymbolicResult`` from
     ``symbolic_factorize(a, detect_supernodes=True)`` (computed on the fly
     when omitted; without a supernode partition the serial detector runs on
-    the pattern).  ``values``: dense (n, n) float64 on A's pattern (defaults
-    to ``generic_values(a)``); ``pattern``: the dense predicted L+U pattern
-    (recomputed from the graph when omitted).  ``backend``: "numpy" (float64
-    BLAS, default) or "kernel" (float32 Pallas MXU panel updates — TPU
-    precision documented in DESIGN.md §4).
+    the pattern).  ``supernodes``: explicit (k, 2) panel ranges, overriding
+    ``sym`` — any contiguous partition is valid (padding absorbs
+    non-uniform structure exactly like relaxed T3 merges).
+
+    ``values``: either dense (n, n) float64 on A's pattern (legacy
+    oracle-friendly form) or CSR-aligned (nnz,) float64 pairing
+    ``a.indices`` — the sparse form never materializes (n, n) and is the
+    one to use at large n (defaults to ``generic_values_csr(a)``).
+    ``pattern``: the predicted L+U pattern as dense (n, n) bool or a
+    ``storage.CSCPattern`` (recomputed from the graph when omitted — a
+    dense small-n convenience).  ``backend``: "numpy" (float64 BLAS,
+    default) or "kernel" (float32 Pallas MXU panel updates — TPU precision
+    documented in DESIGN.md §4).
 
     Raises ``ZeroPivotError`` (global column index) on zero/near-zero pivots
     and ``ValueError`` if any value above ``pattern_tol * scale`` escapes the
@@ -179,31 +238,46 @@ def numeric_factorize(a: CSRMatrix, sym=None, *,
         pattern_tol = 1e-4 if backend == "kernel" else 1e-8
     t0 = time.perf_counter()
     n = a.n
+
     if values is None:
-        values = generic_values(a)
+        values = generic_values_csr(a)
     values = np.asarray(values, dtype=np.float64)
-    if values.shape != (n, n):
-        raise ValueError(f"values must be ({n}, {n}), got {values.shape}")
+    if values.ndim == 2:
+        if values.shape != (n, n):
+            raise ValueError(f"values must be ({n}, {n}), got {values.shape}")
+    elif values.shape != (a.nnz,):
+        raise ValueError(
+            f"values must be dense ({n}, {n}) or CSR-aligned ({a.nnz},), "
+            f"got {values.shape}")
+
     if pattern is None:
         from repro.core.gsofa import dense_pattern, prepare_graph
 
         pattern = dense_pattern(prepare_graph(a))
-    pattern = np.asarray(pattern, dtype=bool).copy()
-    if pattern.shape != (n, n):
-        raise ValueError(f"pattern must be ({n}, {n}), got {pattern.shape}")
-    np.fill_diagonal(pattern, True)
+    if not isinstance(pattern, CSCPattern):
+        pattern = np.asarray(pattern, dtype=bool)
+        if pattern.shape != (n, n):
+            raise ValueError(f"pattern must be ({n}, {n}), got "
+                             f"{pattern.shape}")
+        pattern = CSCPattern.from_dense(pattern)
+    else:
+        pattern = pattern.with_diagonal()
+    if pattern.n != n:
+        raise ValueError(f"pattern is for n={pattern.n}, matrix has n={n}")
 
-    if sym is None:
-        from repro.core.symbolic import symbolic_factorize
-
-        sym = symbolic_factorize(a, detect_supernodes=True)
-    if sym.n != n:
-        raise ValueError(f"symbolic result is for n={sym.n}, matrix has n={n}")
-    supernodes = sym.supernodes
     if supernodes is None:
-        from repro.core.symbolic import detect_supernodes
+        if sym is None:
+            from repro.core.symbolic import symbolic_factorize
 
-        supernodes = detect_supernodes(pattern)
+            sym = symbolic_factorize(a, detect_supernodes=True)
+        if sym.n != n:
+            raise ValueError(
+                f"symbolic result is for n={sym.n}, matrix has n={n}")
+        supernodes = sym.supernodes
+        if supernodes is None:
+            from repro.core.symbolic import detect_supernodes as _detect
+
+            supernodes = _detect(pattern.to_dense())
 
     schedule = build_schedule(pattern, supernodes, n_bins=n_bins,
                               policy=policy)
@@ -211,28 +285,30 @@ def numeric_factorize(a: CSRMatrix, sym=None, *,
     if piv_tol is None:
         piv_tol = pivot_tolerance(scale)
 
-    m = values.copy()
+    store = PanelStore(pattern, schedule.supernodes)
+    input_outside = (store.set_dense(values) if values.ndim == 2
+                     else store.set_csr(a, values))
+
     n_updates = 0
     gemm_flops = 0
+    dropped_max = input_outside
     for level in schedule.levels:
         for j in level:
-            upd, flops = _factor_panel(m, pattern, schedule, int(j),
-                                       piv_tol, backend)
+            upd, flops, dropped = _factor_panel(store, schedule, int(j),
+                                                piv_tol, backend)
             n_updates += upd
             gemm_flops += flops
+            dropped_max = max(dropped_max, dropped)
 
-    outside = ~pattern
-    outside_max = float(np.abs(m[outside]).max()) if outside.any() else 0.0
+    outside_max = max(store.padding_max(), dropped_max)
     if check_pattern and outside_max > pattern_tol * scale:
         raise ValueError(
             f"numeric factorization escaped the symbolic prediction: "
             f"|{outside_max:.3e}| outside the pattern (tol "
             f"{pattern_tol * scale:.3e}) — symbolic under-prediction")
-    m[outside] = 0.0
+    store.zero_padding()
 
-    l = np.tril(m, -1) + np.eye(n)
-    u = np.triu(m)
-    return NumericResult(n=n, l=l, u=u, schedule=schedule, backend=backend,
+    return NumericResult(n=n, store=store, schedule=schedule, backend=backend,
                          elapsed_s=time.perf_counter() - t0,
                          n_updates=n_updates, gemm_flops=gemm_flops,
                          outside_max=outside_max)

@@ -128,6 +128,21 @@ def random_pattern(n: int, *, density: float = 0.01, symmetric: bool = False,
     return csr_from_coo(n, rows, cols)
 
 
+def banded_full(n: int, *, band: int = 8) -> CSRMatrix:
+    """Full band of half-width ``band`` (every |i-j| <= band present).
+
+    No-pivot LU of a dense band fills nothing outside it, so the filled
+    L+U pattern is the matrix's own pattern
+    (``numeric.storage.CSCPattern.banded`` is the exact prediction) — the
+    large-n generator for exercising the packed O(nnz(L+U)) numeric path
+    without a dense symbolic pass."""
+    offs = np.arange(-band, band + 1)
+    rows = np.repeat(np.arange(n), len(offs))
+    cols = rows + np.tile(offs, n)
+    keep = (cols >= 0) & (cols < n)
+    return csr_from_coo(n, rows[keep], cols[keep])
+
+
 def banded_random(n: int, *, band: int = 8, fill: float = 0.5, seed: int = 0) -> CSRMatrix:
     rng = np.random.default_rng(seed)
     m = int(n * band * fill)

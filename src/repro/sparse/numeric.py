@@ -55,6 +55,43 @@ def generic_values(a: CSRMatrix, seed: int = 0) -> np.ndarray:
     return dense
 
 
+def generic_values_csr(a: CSRMatrix, seed: int = 0) -> np.ndarray:
+    """CSR-aligned (nnz,) form of ``generic_values`` — bitwise the same
+    values (same rng stream, same diagonal-dominance rule) without ever
+    materializing (n, n); the packed numeric path consumes this at large n.
+
+    Requires every diagonal entry to be structurally present (all
+    ``sparse.matrices`` generators guarantee it)."""
+    rng = np.random.default_rng(seed)
+    vals = np.empty(a.nnz, dtype=np.float64)
+    diag_pos = np.full(a.n, -1, dtype=np.int64)
+    row_abs_sum = np.zeros(a.n, dtype=np.float64)
+    for i in range(a.n):
+        lo, hi = int(a.indptr[i]), int(a.indptr[i + 1])
+        cols = a.indices[lo:hi]
+        v = rng.uniform(0.5, 1.5, size=len(cols))
+        vals[lo:hi] = v
+        row_abs_sum[i] = np.abs(v).sum()
+        d = np.searchsorted(cols, i)
+        if d >= len(cols) or cols[d] != i:
+            raise ValueError(
+                f"generic_values_csr needs a structural diagonal; row {i} "
+                f"has none")
+        diag_pos[i] = lo + d
+    vals[diag_pos] = row_abs_sum + 1.0
+    return vals
+
+
+def csr_matvec(a: CSRMatrix, vals: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """y = A @ x with CSR-aligned values — the O(nnz) matvec iterative
+    refinement uses on the sparse path."""
+    vals = np.asarray(vals, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    row_of = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
+    return np.bincount(row_of, weights=vals * x[a.indices],
+                       minlength=a.n)
+
+
 def lu_inplace(m: np.ndarray, piv_tol: float, *, col0: int = 0) -> None:
     """In-place no-pivot right-looking elimination of the packed block ``m``
     (L strictly below, U on/above the diagonal) — shared by the dense oracle

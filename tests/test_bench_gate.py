@@ -1,0 +1,141 @@
+"""Benchmark-regression gate (`benchmarks/run.py --check-baseline`) and
+artifact metadata stamping (ISSUE 3 satellites)."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import (  # noqa: E402
+    artifact_meta, check_baselines, save_artifact,
+)
+
+
+def _write(directory, name, payload):
+    os.makedirs(directory, exist_ok=True)
+    with open(os.path.join(directory, name + ".json"), "w") as f:
+        json.dump(payload, f)
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    return str(tmp_path / "artifacts"), str(tmp_path / "baselines")
+
+
+BASE = {"m1": {"speedup": 2.0, "t_run_s": 1.0, "mem_ratio": 100.0,
+               "n": 500}}
+
+
+def test_gate_passes_on_identical_artifacts(dirs):
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    _write(art, "bench_x", BASE)
+    assert check_baselines(artifacts_dir=art, baseline_dir=base) == []
+
+
+def test_gate_fails_on_speedup_regression(dirs):
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    fresh = {"m1": dict(BASE["m1"], speedup=1.4)}     # 30% drop
+    _write(art, "bench_x", fresh)
+    v = check_baselines(artifacts_dir=art, baseline_dir=base)
+    assert len(v) == 1
+    assert v[0]["kind"] == "ratio-regression"
+    assert "speedup" in v[0]["path"]
+
+
+def test_gate_fails_on_mem_ratio_collapse(dirs):
+    """Reintroducing dense working storage collapses mem_ratio — gated."""
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    _write(art, "bench_x", {"m1": dict(BASE["m1"], mem_ratio=1.0)})
+    v = check_baselines(artifacts_dir=art, baseline_dir=base)
+    assert [x["kind"] for x in v] == ["ratio-regression"]
+    assert "mem_ratio" in v[0]["path"]
+
+
+def test_gate_respects_tolerance(dirs):
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    fresh = {"m1": dict(BASE["m1"], speedup=1.6)}     # 20% drop < 25% tol
+    _write(art, "bench_x", fresh)
+    assert check_baselines(artifacts_dir=art, baseline_dir=base,
+                           tolerance=0.25) == []
+    v = check_baselines(artifacts_dir=art, baseline_dir=base,
+                        tolerance=0.10)
+    assert len(v) == 1
+
+
+def test_times_gated_only_on_request(dirs):
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    fresh = {"m1": dict(BASE["m1"], t_run_s=1.5)}     # 50% slower
+    _write(art, "bench_x", fresh)
+    assert check_baselines(artifacts_dir=art, baseline_dir=base) == []
+    v = check_baselines(artifacts_dir=art, baseline_dir=base,
+                        include_times=True)
+    assert [x["kind"] for x in v] == ["time-regression"]
+
+
+def test_throughput_rates_are_not_gated_as_times(dirs):
+    """cols_per_s is a higher-is-better rate, not a wall-clock metric —
+    a rise (or fall) must never be flagged as a time regression."""
+    art, base = dirs
+    _write(base, "bench_x", {"m1": {"cols_per_s": 1000.0}})
+    _write(art, "bench_x", {"m1": {"cols_per_s": 2000.0}})
+    assert check_baselines(artifacts_dir=art, baseline_dir=base,
+                           include_times=True) == []
+
+
+def test_missing_fresh_artifact_is_a_violation(dirs):
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    os.makedirs(art, exist_ok=True)
+    v = check_baselines(artifacts_dir=art, baseline_dir=base)
+    assert [x["kind"] for x in v] == ["missing"]
+
+
+def test_missing_metric_is_a_violation(dirs):
+    art, base = dirs
+    _write(base, "bench_x", BASE)
+    _write(art, "bench_x", {"m1": {"speedup": 2.0}})
+    kinds = {x["kind"] for x in
+             check_baselines(artifacts_dir=art, baseline_dir=base)}
+    assert kinds == {"missing"}           # t_run_s / mem_ratio / n absent
+
+
+def test_meta_never_participates(dirs):
+    art, base = dirs
+    _write(base, "bench_x", {**BASE, "_meta": {"git_sha": "old"}})
+    _write(art, "bench_x", {**BASE, "_meta": {"git_sha": "new"}})
+    assert check_baselines(artifacts_dir=art, baseline_dir=base) == []
+
+
+def test_save_artifact_stamps_metadata(tmp_path):
+    payload = {"m1": {"speedup": 2.0}}
+    path = save_artifact("bench_meta_test", payload,
+                         directory=str(tmp_path))
+    with open(path) as f:
+        on_disk = json.load(f)
+    meta = on_disk["_meta"]
+    for key in ("git_sha", "jax_version", "backend", "timestamp"):
+        assert key in meta and meta[key]
+    assert "_meta" not in payload         # caller's dict untouched
+
+
+def test_artifact_meta_shape():
+    meta = artifact_meta()
+    assert set(meta) >= {"git_sha", "jax_version", "backend", "timestamp"}
+
+
+def test_committed_baselines_exist_and_gate_runs():
+    """The real committed baselines are well-formed; against their own
+    copies the gate is clean."""
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    base = os.path.join(repo, "benchmarks", "baselines")
+    names = [f for f in os.listdir(base) if f.endswith(".json")]
+    assert {"bench_numeric.json", "bench_supernode.json",
+            "bench_solve.json"} <= set(names)
+    assert check_baselines(artifacts_dir=base, baseline_dir=base) == []
