@@ -4,17 +4,18 @@ The end-to-end payoff of the PR-2 numeric subsystem (DESIGN.md §4): consume
 the symbolic panel partition in a supernodal left-looking factorization whose
 updates are accumulated dense GEMMs, and compare against the honest
 column-at-a-time left-looking baseline (one axpy per structural U entry) on
-the fill-heavy generators.  Parity against the dense no-pivot oracle is
-asserted, so the speedup is never reported for wrong factors.
+the fill-heavy generators.  The supernodal side runs through the plan/factor
+session API (``analyze`` once, ``plan.factorize`` per timing repeat —
+DESIGN.md §10).  Parity against the dense no-pivot oracle is asserted, so
+the speedup is never reported for wrong factors.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import print_table, save_artifact, timeit
-from repro.core.gsofa import dense_pattern, prepare_graph
-from repro.core.symbolic import symbolic_factorize
-from repro.numeric import factorize_columns, numeric_factorize
+from repro.api import LUOptions, analyze
+from repro.numeric import factorize_columns
 from repro.sparse import grid2d_laplacian, grid3d_laplacian, permute_csr, rcm_order
 from repro.sparse.numeric import generic_values, lu_nopivot
 
@@ -31,19 +32,16 @@ def run(relax: int = 2, n_bins: int = 8, repeats: int = 3) -> dict:
     for name, gen in MATRICES.items():
         a = gen()
         a = permute_csr(a, rcm_order(a))
-        sym = symbolic_factorize(a, concurrency=256, detect_supernodes=True,
-                                 supernode_relax=relax)
-        pattern = dense_pattern(prepare_graph(a), batch=256)
+        plan = analyze(a, LUOptions(concurrency=256, supernode_relax=relax,
+                                    n_bins=n_bins))
+        pattern = plan.pattern.to_dense()           # column baseline input
         values = generic_values(a)
 
         t_col = timeit(lambda: factorize_columns(values, pattern),
                        repeats=repeats)
-        num = numeric_factorize(a, sym, values=values, pattern=pattern,
-                                n_bins=n_bins)     # doubles as the warmup
-        t_sup = timeit(lambda: numeric_factorize(a, sym, values=values,
-                                                 pattern=pattern,
-                                                 n_bins=n_bins),
-                       repeats=repeats, warmup=0)
+        num = plan.factorize(values).num            # doubles as the warmup
+        t_sup = timeit(lambda: plan.factorize(values), repeats=repeats,
+                       warmup=0)
         l0, u0 = lu_nopivot(values)
         rel = max(np.abs(num.l - l0).max() / np.abs(l0).max(),
                   np.abs(num.u - u0).max() / np.abs(u0).max())

@@ -3,12 +3,16 @@
 Two regimes:
 
 * fill-heavy stencil generators (the bench_numeric matrices) — full
-  pipeline with dense-oracle parity: ``solve`` must match
-  ``numpy.linalg.solve`` and reach a relative residual <= 1e-10;
+  pipeline through the plan/factor session API with dense-oracle parity:
+  the solve must match ``numpy.linalg.solve`` and reach a relative
+  residual <= 1e-10, with factorization and substitution timed separately
+  (``LUFactorization.factor_s`` / ``SolveResult.solve_s``);
 * a large full-band matrix (n = 20_000) driven entirely through the sparse
-  path (CSR-aligned values + ``CSCPattern`` + uniform panels) — the regime
-  the dense working matrix could never reach; the packed store is asserted
-  to stay O(nnz(L+U)) (no (n, n) allocation anywhere).
+  engine path (CSR-aligned values + a hand-built ``CSCPattern`` + uniform
+  panels — the band's diameter makes the symbolic fixpoint the wrong tool,
+  so the analyze-driven large case lives in bench_refactorize) — the
+  regime the dense working matrix could never reach; the packed store is
+  asserted to stay O(nnz(L+U)) (no (n, n) allocation anywhere).
 
 Exits nonzero (via run.py) if any residual or memory gate fails.
 """
@@ -17,8 +21,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import print_table, save_artifact, timeit
-from repro.core.gsofa import dense_pattern, prepare_graph
-from repro.core.symbolic import symbolic_factorize
+from repro.api import LUOptions, analyze
 from repro.numeric import (
     CSCPattern, numeric_factorize, solve, solve_factored, uniform_supernodes,
 )
@@ -42,17 +45,14 @@ LARGE_PANEL = 8
 
 def _small_case(name, gen, repeats):
     a = permute_csr(gen(), rcm_order(gen()))
-    sym = symbolic_factorize(a, concurrency=256, detect_supernodes=True,
-                             supernode_relax=2)
-    pattern = dense_pattern(prepare_graph(a), batch=256)
+    plan = analyze(a, LUOptions(concurrency=256, supernode_relax=2))
     values = generic_values(a)
     rng = np.random.default_rng(42)
     b = rng.standard_normal(a.n)
 
-    t_factor = timeit(lambda: numeric_factorize(a, sym, values=values,
-                                                pattern=pattern),
-                      repeats=repeats)
-    res = solve(a, b, sym=sym, values=values, pattern=pattern)
+    t_factor = timeit(lambda: plan.factorize(values), repeats=repeats)
+    factor = plan.factorize(values)
+    res = factor.solve(b)
     t_solve = timeit(lambda: solve_factored(res.num, b), repeats=repeats)
 
     x0 = np.linalg.solve(values, b)
@@ -63,14 +63,17 @@ def _small_case(name, gen, repeats):
     if res.residual > RESIDUAL_GATE:
         raise RuntimeError(f"{name}: residual {res.residual:.2e} above "
                            f"{RESIDUAL_GATE:.0e}")
-    sched = build_solve_schedule(res.num.store)
+    sched = plan.solve_schedule
     return a, res, {
         "n": a.n, "nnz": a.nnz,
         "store_entries": res.num.store_entries,
         "store_mb": res.num.store.nbytes / 1e6,
         "dense_mb": a.n * a.n * 8 / 1e6,
         "mem_ratio": (a.n * a.n * 8) / max(1, res.num.store.nbytes),
+        # the factor/solve timing split: factor_s is the plan-based numeric
+        # sweep, solve_s the substitution + refinement of the solve call
         "t_factor_s": t_factor, "t_solve_s": t_solve,
+        "factor_s": factor.factor_s, "solve_s": res.solve_s,
         "residual_first": res.residuals[0], "residual_final": res.residual,
         "refine_accepted": res.refine_accepted,
         "n_fwd_levels": sched.n_fwd_levels,
@@ -118,6 +121,7 @@ def _large_case(repeats):
         "dense_mb": n * n * 8 / 1e6,
         "mem_ratio": (n * n * 8) / max(1, store.nbytes),
         "t_factor_s": t_factor, "t_solve_s": t_solve,
+        "factor_s": res.factor_s, "solve_s": res.solve_s,
         "residual_first": res.residuals[0], "residual_final": res.residual,
         "refine_accepted": res.refine_accepted,
         "n_fwd_levels": sched.n_fwd_levels,

@@ -155,7 +155,11 @@ def load_datasets(codes: Iterable[str] | None = None):
     return out
 
 
-def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1,
+           reduce: Callable = np.median) -> float:
+    """Wall time of ``fn`` reduced over ``repeats`` runs.  ``reduce`` is
+    ``np.median`` for reporting; pass ``min`` for *gated* comparisons
+    (best-of-N is robust to CI load spikes where median-of-3 flaps)."""
     for _ in range(warmup):
         fn()
     ts = []
@@ -163,7 +167,7 @@ def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         fn()
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(reduce(ts))
 
 
 def print_table(title: str, header, rows) -> None:

@@ -13,6 +13,7 @@ Paper-figure map:
   supernode    -> §"supernode detection" (streamed fingerprints vs post-pass)
   numeric      -> DESIGN.md §4 (supernodal numeric LU vs column-at-a-time)
   solve        -> DESIGN.md §9 (packed CSC-panel storage + solve/refinement)
+  refactorize  -> DESIGN.md §10 (plan reuse: analyze once, refactorize many)
   roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
@@ -69,8 +70,9 @@ def main() -> None:
     only = set(filter(None, args.only.split(",")))
 
     from benchmarks import (bench_balance, bench_concurrency, bench_numeric,
-                            bench_solve, bench_space, bench_speedup,
-                            bench_supernode, bench_workload, roofline)
+                            bench_refactorize, bench_solve, bench_space,
+                            bench_speedup, bench_supernode, bench_workload,
+                            roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
@@ -80,6 +82,7 @@ def main() -> None:
         ("supernode", bench_supernode.main),
         ("numeric", bench_numeric.main),
         ("solve", bench_solve.main),
+        ("refactorize", bench_refactorize.main),
         ("roofline", roofline.main),
     ]
     failures = []

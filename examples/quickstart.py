@@ -1,25 +1,26 @@
-"""Quickstart: the paper's technique as a three-line API call.
+"""Quickstart: analyze once, refactorize many, solve multi-RHS.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Generates a circuit-simulation-like sparse matrix (the paper's dominant
-application domain), reorders it (RCM), runs GSoFa symbolic factorization,
-validates the predicted L/U structure two independent ways (sequential fill2
-and a numeric LU restricted to the pattern), consumes the supernode panel
-partition in the supernodal numeric factorization (packed O(nnz(L+U))
-CSC-panel storage — no dense working matrix), and finishes with
-``solve(a, b)``: supernodal triangular substitution plus iterative
-refinement — the full symbolic -> numeric -> solve sparse pipeline.
+application domain), reorders it (RCM), and runs the plan/factor session
+API: ``repro.analyze`` performs GSoFa symbolic factorization ONCE — the
+fixpoint streams out the L/U counts, the supernode panel partition, and the
+sparse CSC pattern, and the plan precomputes every value-independent
+structure (schedules, gather maps, packed-store template).  Each
+``plan.factorize(values)`` is then only the numeric panel sweep (the
+circuit-simulation refactorization regime), and ``factor.solve`` handles
+single and multi-RHS systems with iterative refinement.  The symbolic
+prediction is validated two independent ways along the way (sequential
+fill2 and a numeric LU restricted to the pattern).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro import numeric_factorize, solve
+import repro
 from repro.core.fill2 import fill2_all
-from repro.core.gsofa import dense_pattern, prepare_graph
-from repro.core.symbolic import symbolic_factorize
 from repro.sparse import circuit_like, permute_csr, rcm_order
 from repro.sparse.numeric import generic_values, validate_symbolic
 
@@ -30,53 +31,59 @@ def main() -> None:
     a = permute_csr(a, rcm_order(a))
     print(f"matrix: n={a.n} nnz={a.nnz}")
 
-    # 2. symbolic factorization (the paper's contribution), with streamed
-    #    supernode detection riding along on the same fixpoint chunks
-    res = symbolic_factorize(a, concurrency=256, detect_supernodes=True)
-    print(f"L+U nonzeros: {res.lu_nnz}  fill ratio: {res.fill_ratio:.2f}")
-    print(f"effective #C: {res.concurrency}  supersteps: {res.supersteps} "
-          f"label re-inits: {res.reinits}")
-    print(f"aux memory: {res.memory_report['aux_bytes']/1e6:.1f} MB "
-          f"({res.memory_report['ratio']:.0f}x the matrix)")
-    print(f"supernodes: {res.n_supernodes} "
-          f"(mean size {res.mean_supernode_size:.2f}, "
-          f"largest {int((res.supernodes[:,1]-res.supernodes[:,0]).max())})")
-    print(f"elapsed: {res.elapsed_s*1e3:.0f} ms")
+    # 2. analyze ONCE: symbolic factorization (the paper's contribution)
+    #    with streamed supernode detection and CSC pattern extraction riding
+    #    along on the same fixpoint chunks, plus every value-independent
+    #    precomputation of the numeric pipeline
+    plan = repro.analyze(a, repro.LUOptions(concurrency=256))
+    sym = plan.sym
+    print(f"L+U nonzeros: {sym.lu_nnz}  fill ratio: {sym.fill_ratio:.2f}")
+    print(f"effective #C: {sym.concurrency}  supersteps: {sym.supersteps} "
+          f"label re-inits: {sym.reinits}")
+    print(f"supernodes: {plan.n_supernodes} "
+          f"(mean size {sym.mean_supernode_size:.2f}) in "
+          f"{plan.n_levels} dependency levels")
+    print(f"analyze: {plan.analyze_s*1e3:.0f} ms (plan is picklable — cache "
+          f"it and refactorize forever)")
 
     # 3a. validate against sequential fill2 (Rose & Tarjan)
     rows, _ = fill2_all(a)
     l_cnt = np.array([(r < i).sum() for i, r in enumerate(rows)])
     u_cnt = np.array([(r > i).sum() for i, r in enumerate(rows)])
-    assert (l_cnt == res.l_counts).all() and (u_cnt == res.u_counts).all()
+    assert (l_cnt == sym.l_counts).all() and (u_cnt == sym.u_counts).all()
     print("fill2 agreement: OK")
 
     # 3b. validate by numeric factorization inside the predicted pattern
-    pattern = dense_pattern(prepare_graph(a), batch=256)
-    report = validate_symbolic(a, pattern)
+    #     (plan.pattern is the CSC structure streamed from the fixpoint)
+    report = validate_symbolic(a, plan.pattern.to_dense())
     print(f"numeric LU within pattern: {'OK' if report['ok'] else 'FAIL'} "
           f"(missed {report['n_missed']}, spurious {report['n_spurious']})")
 
-    # 4. supernodal numeric factorization consuming the panel partition —
-    #    factors live in packed CSC-panel storage sized by the prediction,
-    #    not in a dense (n, n) working matrix
+    # 4. refactorize: each new value set on the same pattern costs only the
+    #    numeric panel sweep — packed O(nnz(L+U)) storage, no dense (n, n)
+    #    working matrix, no schedule/map reconstruction
     values = generic_values(a)
-    num = numeric_factorize(a, res, values=values, pattern=pattern)
+    factor = plan.factorize(values)
+    num = factor.num
     resid = np.abs(num.reconstruct() - values).max() / np.abs(values).max()
-    print(f"supernodal numeric LU: {num.n_supernodes} panels in "
-          f"{num.n_levels} dependency levels, {num.n_updates} panel updates "
-          f"({num.gemm_flops/1e6:.1f} MFLOP of GEMMs)")
+    print(f"factorize: {num.n_supernodes} panels, {num.n_updates} panel "
+          f"updates ({num.gemm_flops/1e6:.1f} MFLOP of GEMMs) in "
+          f"{factor.factor_s*1e3:.0f} ms")
     print(f"packed store: {num.store_entries} slots "
           f"({num.store.nbytes/1e6:.2f} MB vs {a.n*a.n*8/1e6:.0f} MB dense)")
-    print(f"|LU - A| / |A| = {resid:.2e}  "
-          f"(elapsed {num.elapsed_s*1e3:.0f} ms)")
+    print(f"|LU - A| / |A| = {resid:.2e}")
+    factor2 = plan.factorize(values * 1.7)     # new values, same structure
+    print(f"refactorize (new values): {factor2.factor_s*1e3:.0f} ms")
 
-    # 5. end-to-end solve: supernodal triangular substitution on the packed
-    #    factors + iterative refinement (refine_tol=0.0 shows the refinement
-    #    history; the default stops as soon as the residual is <= 1e-14)
-    b = np.random.default_rng(0).standard_normal(a.n)
-    sol = solve(a, b, values=values, num=num, refine_tol=0.0)
-    print(f"solve: ||Ax-b||/||b|| = {sol.residual:.2e} after "
-          f"{sol.refine_accepted} refinement step(s) "
+    # 5. solve on the factors: supernodal triangular substitution +
+    #    iterative refinement; b may be one RHS (n,) or a multi-RHS block
+    #    (n, k) — k systems for one factorization
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal((a.n, 4))
+    sol = factor.solve(b, refine_tol=0.0)
+    print(f"multi-RHS solve: x is {sol.x.shape}, worst ||Ax-b||/||b|| = "
+          f"{sol.residual:.2e} after {sol.refine_accepted} refinement "
+          f"step(s) in {sol.solve_s*1e3:.1f} ms "
           f"(history {['%.1e' % r for r in sol.residuals]})")
 
 

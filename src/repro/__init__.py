@@ -5,21 +5,35 @@ Layers: core (the paper's algorithm), sparse (matrix substrate), numeric
 (Pallas TPU), models/train/data/checkpoint/runtime (LM framework substrate),
 configs + launch (architectures, production mesh, dry-run drivers).
 
-The end-to-end sparse LU entry points are re-exported lazily::
+The public entry point is the plan/factor session API (``repro.api``,
+DESIGN.md §10): analyze a structure once, refactorize it many times with
+new values, solve single or multi-RHS systems on the factors::
 
-    from repro import solve, symbolic_factorize, numeric_factorize
-    sym = symbolic_factorize(a, detect_supernodes=True)
-    num = numeric_factorize(a, sym)     # O(nnz(L+U)) packed factors
-    res = solve(a, b, sym=sym)          # x + relative-residual history
+    import repro
+
+    plan = repro.analyze(a, repro.LUOptions(supernode_relax=2))
+    factor = plan.factorize(values)        # numeric sweep only
+    result = factor.solve(b)               # b: (n,) or (n, k)
+
+The legacy one-shot trio (``symbolic_factorize`` -> ``numeric_factorize``
+-> ``solve``) still works for one release behind ``DeprecationWarning``
+shims with bitwise-identical results.
 """
-__version__ = "1.2.0"
+__version__ = "1.3.0"
 
 _LAZY_EXPORTS = {
-    "symbolic_factorize": "repro.core.symbolic",
+    # plan/factor session API (the supported surface)
+    "analyze": "repro.api",
+    "LUOptions": "repro.api",
+    "LUPlan": "repro.api",
+    "LUFactorization": "repro.api",
+    # deprecated one-shot shims (DeprecationWarning for one release)
+    "symbolic_factorize": "repro.api",
+    "numeric_factorize": "repro.api",
+    "solve": "repro.api",
+    # result / substrate types
     "SymbolicResult": "repro.core.symbolic",
-    "numeric_factorize": "repro.numeric",
     "NumericResult": "repro.numeric",
-    "solve": "repro.numeric",
     "SolveResult": "repro.numeric",
     "PanelStore": "repro.numeric",
     "CSCPattern": "repro.numeric",

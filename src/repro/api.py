@@ -1,0 +1,323 @@
+"""Plan/factor session API: analyze once, refactorize many, solve multi-RHS.
+
+GSoFa's premise is that symbolic analysis is a separable, reusable phase.
+The dominant sparse-LU workload in practice — circuit simulation per GLU3.0
+(arXiv:1908.00204) and HYLU (arXiv:2509.07690) — factorizes the *same*
+sparsity pattern hundreds of times with new values, so the public API is
+built around that split (DESIGN.md §10)::
+
+    import repro
+
+    plan = repro.analyze(a, repro.LUOptions(supernode_relax=2))
+    for values in value_stream:            # same pattern, new values
+        factor = plan.factorize(values)    # numeric sweep only
+        result = factor.solve(b)           # b is (n,) or multi-RHS (n, k)
+
+``analyze`` runs the symbolic fixpoint + streamed supernode detection and
+precomputes **everything value-independent**:
+
+* the sparse ``CSCPattern`` of L+U, streamed straight from the fixpoint
+  chunks (``core.symbolic.PatternCollector``) — no dense (n, n) pattern is
+  ever materialized, at any n;
+* the supernode panel partition and ``pack_panels`` bins;
+* the factorization level schedule (panel elimination DAG);
+* the per-panel sorted-row gather/scatter maps of every ancestor update
+  (``schedule.build_gather_maps``) and the CSR value-scatter maps
+  (``PanelStore.csr_maps``);
+* the forward/backward solve-level DAGs (``build_solve_schedule``);
+* a ``PanelStore`` structure template sized from the symbolic prediction.
+
+``LUPlan.factorize(values)`` then runs only the value-dependent panel sweep
+(scatter + level-scheduled GEMM updates) on a fresh set of block buffers
+sharing the template's structure; ``LUFactorization.refactorize(values)``
+goes one step further and reuses the same buffers in place.  Factors are
+bitwise-identical to one-shot ``numeric_factorize`` by construction (shared
+``factor_on_store`` engine).  Plans hold only numpy arrays and plain
+dataclasses, so they pickle — analyses can be cached across processes.
+
+The legacy three-function surface (``repro.symbolic_factorize`` ->
+``repro.numeric_factorize`` -> ``repro.solve``) lives on below as thin
+deprecation shims over the same engines (one release of
+``DeprecationWarning``, bitwise-identical results).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.symbolic import SymbolicResult
+from repro.core.symbolic import symbolic_factorize as _symbolic_factorize
+from repro.numeric.schedule import PanelSchedule, build_gather_maps, build_schedule
+from repro.numeric.solve import SolveResult, SolveSchedule, build_solve_schedule
+from repro.numeric.solve import solve as _solve
+from repro.numeric.storage import CSCPattern, CsrScatterMaps, PanelStore
+from repro.numeric.supernodal import NumericResult, factor_on_store
+from repro.numeric.supernodal import numeric_factorize as _numeric_factorize
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.numeric import generic_values_csr
+
+_SYMBOLIC_BACKENDS = ("ell", "dense", "kernel")
+_NUMERIC_BACKENDS = ("numpy", "kernel")
+_POLICIES = ("lpt", "contiguous")
+
+
+@dataclasses.dataclass(frozen=True)
+class LUOptions:
+    """Every knob of the symbolic -> numeric -> solve pipeline in one frozen
+    object — replaces the kwarg sprawl the three-layer API used to thread.
+
+    Symbolic fixpoint: ``concurrency`` (#C source chunk size), ``backend``
+    (relaxation backend), ``combined`` (one batched fixpoint per chunk),
+    ``bubble`` (label-window truncation), ``use_arena`` (label re-init
+    elision), ``budget_bytes`` (memory envelope -> effective #C),
+    ``checkpoint_path`` (per-chunk durable progress).
+
+    Supernodes: ``supernode_relax`` (T3 merge tolerance, 0 = exact T2),
+    ``supernode_max_size`` (panel width cap).
+
+    Numeric: ``n_bins``/``policy`` (pack_panels within-level grouping),
+    ``numeric_backend`` ("numpy" float64 BLAS or "kernel" Pallas MXU),
+    ``piv_tol`` (zero-pivot threshold; None = eps at matrix scale),
+    ``check_pattern``/``pattern_tol`` (validate_symbolic contract).
+
+    Solve: ``refine_iters``/``refine_tol`` (iterative refinement bounds).
+    """
+
+    # -- symbolic fixpoint
+    concurrency: int = 128
+    backend: str = "ell"
+    combined: bool = True
+    bubble: bool = False
+    use_arena: bool = True
+    budget_bytes: Optional[int] = None
+    checkpoint_path: Optional[str] = None
+    # -- supernode detection
+    supernode_relax: int = 0
+    supernode_max_size: int = 64
+    # -- numeric factorization
+    n_bins: int = 8
+    policy: str = "lpt"
+    numeric_backend: str = "numpy"
+    piv_tol: Optional[float] = None
+    check_pattern: bool = True
+    pattern_tol: Optional[float] = None
+    # -- solve / refinement
+    refine_iters: int = 2
+    refine_tol: Optional[float] = None
+
+    def __post_init__(self):
+        if self.backend not in _SYMBOLIC_BACKENDS:
+            raise ValueError(f"unknown symbolic backend {self.backend!r}; "
+                             f"pick from {_SYMBOLIC_BACKENDS}")
+        if self.numeric_backend not in _NUMERIC_BACKENDS:
+            raise ValueError(f"unknown numeric backend "
+                             f"{self.numeric_backend!r}; pick from "
+                             f"{_NUMERIC_BACKENDS}")
+        if self.policy not in _POLICIES:
+            raise ValueError(f"unknown packing policy {self.policy!r}; "
+                             f"pick from {_POLICIES}")
+
+    def replace(self, **changes) -> "LUOptions":
+        """A copy with ``changes`` applied (frozen-dataclass convenience)."""
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class LUFactorization:
+    """Numeric factors of one value set on a plan's structure.
+
+    ``solve`` runs supernodal substitution + refinement on the packed
+    factors (single (n,) or multi-RHS (n, k)); ``refactorize`` overwrites
+    *this* factorization's buffers with a new value set (in-place reuse —
+    the previous factors become invalid; use ``plan.factorize`` for
+    independent factor objects).
+    """
+
+    plan: "LUPlan"
+    num: NumericResult
+    values: np.ndarray           # what was factored (refinement matvec)
+    factor_s: float              # scatter + panel-sweep wall time
+
+    @property
+    def n(self) -> int:
+        return self.num.n
+
+    @property
+    def store(self) -> PanelStore:
+        return self.num.store
+
+    @property
+    def l(self) -> np.ndarray:
+        """Dense unit-lower L — test/oracle reconstruction helper."""
+        return self.num.l
+
+    @property
+    def u(self) -> np.ndarray:
+        """Dense upper U — test/oracle reconstruction helper."""
+        return self.num.u
+
+    def solve(self, b: np.ndarray, *, refine_iters: Optional[int] = None,
+              refine_tol: Optional[float] = None) -> SolveResult:
+        """Solve A x = b on the existing factors.  ``b`` is (n,) or
+        (n, k); refinement knobs default to the plan's ``LUOptions``.
+        ``SolveResult.factor_s`` is 0.0 — the factorization time lives on
+        this object's ``factor_s``."""
+        opts = self.plan.options
+        return _solve(
+            self.plan.a, b, values=self.values, num=self.num,
+            refine_iters=(opts.refine_iters if refine_iters is None
+                          else refine_iters),
+            refine_tol=opts.refine_tol if refine_tol is None else refine_tol)
+
+    def refactorize(self, values: np.ndarray) -> "LUFactorization":
+        """Factor a new value set **in place** on this factorization's
+        buffers (zero + rescatter + panel sweep; no allocation)."""
+        return self.plan.factorize(values, _reuse_store=self.num.store)
+
+
+@dataclasses.dataclass
+class LUPlan:
+    """One matrix structure, analyzed once: the symbolic prediction plus
+    every value-independent precomputation of the numeric pipeline.
+
+    Plans are picklable (numpy arrays + plain dataclasses only), so an
+    analysis can be computed in one process and reused in many — the
+    refactorization server pattern.  ``factorize(values)`` is the only
+    per-value work: O(nnz) scatter + the level-scheduled panel sweep.
+    """
+
+    a: CSRMatrix
+    options: LUOptions
+    sym: SymbolicResult
+    pattern: CSCPattern
+    schedule: PanelSchedule
+    store_template: PanelStore
+    gather_maps: List
+    csr_maps: CsrScatterMaps
+    solve_schedule: SolveSchedule
+    analyze_s: float
+
+    @property
+    def n(self) -> int:
+        return self.a.n
+
+    @property
+    def lu_nnz(self) -> int:
+        """Predicted structural nonzeros of L+U (diagonal included)."""
+        return self.pattern.nnz
+
+    @property
+    def n_supernodes(self) -> int:
+        return self.schedule.n_panels
+
+    @property
+    def n_levels(self) -> int:
+        return self.schedule.n_levels
+
+    def factorize(self, values: Optional[np.ndarray] = None, *,
+                  _reuse_store: Optional[PanelStore] = None
+                  ) -> LUFactorization:
+        """Numeric factorization of ``values`` (CSR-aligned (nnz,) or dense
+        (n, n); defaults to ``generic_values_csr``) on the precomputed
+        structure — no schedule/store/map reconstruction.  Bitwise-identical
+        factors to one-shot ``numeric_factorize`` on the same inputs."""
+        t0 = time.perf_counter()
+        if values is None:
+            values = generic_values_csr(self.a)
+        store = (_reuse_store if _reuse_store is not None
+                 else PanelStore.from_structure(self.store_template))
+        store._solve_schedule = self.solve_schedule
+        num = factor_on_store(
+            self.a, values, store, self.schedule,
+            backend=self.options.numeric_backend,
+            piv_tol=self.options.piv_tol,
+            check_pattern=self.options.check_pattern,
+            pattern_tol=self.options.pattern_tol,
+            maps=self.gather_maps, csr_maps=self.csr_maps,
+            store_is_zeroed=_reuse_store is None)
+        return LUFactorization(plan=self, num=num,
+                               values=np.asarray(values, dtype=np.float64),
+                               factor_s=time.perf_counter() - t0)
+
+    def solve(self, b: np.ndarray,
+              values: Optional[np.ndarray] = None) -> SolveResult:
+        """Convenience: factorize ``values`` and solve in one call (the
+        result's ``factor_s``/``solve_s`` split stays honest)."""
+        factor = self.factorize(values)
+        res = factor.solve(b)
+        res.factor_s = factor.factor_s
+        return res
+
+
+def analyze(a: CSRMatrix, options: Optional[LUOptions] = None) -> LUPlan:
+    """Symbolic analysis of ``a``: one fixpoint pass streams out the L/U
+    counts, the supernode partition (fingerprints), and the sparse
+    ``CSCPattern``; everything value-independent downstream (schedules,
+    row-index gather maps, CSR scatter maps, store structure, solve DAGs)
+    is precomputed into the returned ``LUPlan``.
+
+    This never materializes a dense (n, n) pattern — host memory stays
+    O(nnz(L+U)) plus one (concurrency, n) chunk mask, so it scales to the
+    packed numeric path's n (tens of thousands and up).
+    """
+    t0 = time.perf_counter()
+    opts = options if options is not None else LUOptions()
+    sym = _symbolic_factorize(
+        a, concurrency=opts.concurrency, backend=opts.backend,
+        combined=opts.combined, bubble=opts.bubble,
+        use_arena=opts.use_arena, budget_bytes=opts.budget_bytes,
+        checkpoint_path=opts.checkpoint_path,
+        detect_supernodes=True, supernode_relax=opts.supernode_relax,
+        supernode_max_size=opts.supernode_max_size,
+        collect_pattern=True)
+    pattern = sym.pattern
+    schedule = build_schedule(pattern, sym.supernodes, n_bins=opts.n_bins,
+                              policy=opts.policy)
+    store_template = PanelStore(pattern, schedule.supernodes)
+    gather_maps = build_gather_maps(store_template, schedule)
+    csr_maps = store_template.csr_maps(a)
+    solve_schedule = build_solve_schedule(store_template)
+    return LUPlan(a=a, options=opts, sym=sym, pattern=pattern,
+                  schedule=schedule, store_template=store_template,
+                  gather_maps=gather_maps, csr_maps=csr_maps,
+                  solve_schedule=solve_schedule,
+                  analyze_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# deprecated one-shot surface (one release of DeprecationWarning)
+# ---------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.{old} is deprecated and will be removed in the next "
+        f"release; use {new} (see repro.analyze / LUPlan / "
+        f"LUFactorization)", DeprecationWarning, stacklevel=3)
+
+
+def symbolic_factorize(a: CSRMatrix, **kwargs) -> SymbolicResult:
+    """Deprecated top-level shim — use ``repro.analyze`` (the plan carries
+    the ``SymbolicResult`` as ``plan.sym``).  Results are bitwise-identical
+    to the engine this shim forwards to."""
+    _deprecated("symbolic_factorize", "repro.analyze(a, options).sym")
+    return _symbolic_factorize(a, **kwargs)
+
+
+def numeric_factorize(a: CSRMatrix, sym=None, **kwargs) -> NumericResult:
+    """Deprecated top-level shim — use ``repro.analyze(a).factorize(values)``
+    which skips the per-call schedule/store/map reconstruction."""
+    _deprecated("numeric_factorize",
+                "repro.analyze(a, options).factorize(values).num")
+    return _numeric_factorize(a, sym, **kwargs)
+
+
+def solve(a: CSRMatrix, b: np.ndarray, **kwargs) -> SolveResult:
+    """Deprecated top-level shim — use
+    ``repro.analyze(a).factorize(values).solve(b)``."""
+    _deprecated("solve",
+                "repro.analyze(a, options).factorize(values).solve(b)")
+    return _solve(a, b, **kwargs)

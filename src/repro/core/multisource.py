@@ -117,7 +117,8 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
                     budget_bytes: Optional[int] = None,
                     sources: Optional[np.ndarray] = None,
                     collect_masks: bool = False,
-                    on_chunk: Optional[Callable] = None) -> MultiSourceResult:
+                    on_chunk: Optional[Callable] = None,
+                    on_mask: Optional[Callable] = None) -> MultiSourceResult:
     """Single-device multi-source driver: plan chunks, run fixpoints, aggregate.
 
     ``on_chunk(labels, srcs, offset)`` is invoked with every converged label
@@ -126,6 +127,13 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
     padding), offset the label-window base.  This is how supernode
     fingerprinting (repro.supernodes) overlaps detection with the symbolic
     chunks instead of gathering the dense pattern afterwards.
+
+    ``on_mask(mask, srcs)`` receives the *full-width* (G, n) bool fill mask
+    of each converged chunk (bubble chunks are finalized to full width
+    first) — this is how the sparse CSC pattern streams out of the fixpoint
+    (core.symbolic.PatternCollector) without ever gathering a dense (n, n)
+    pattern on the host: each delivery is O(concurrency * n) and is reduced
+    to per-row index lists before the next chunk arrives.
     """
     n = graph.n
     concurrency = auto_concurrency(graph, budget_bytes, concurrency, backend)
@@ -185,12 +193,14 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
                 if arena is not None and combined:
                     arena.buf = res.labels
                 mask = None
-                if collect_masks:
+                if collect_masks or on_mask is not None:
                     mask = fill_masks(res.labels, gs, offset)
                 l_cnt, u_cnt = row_counts(res.labels, gs, offset)
 
             if on_chunk is not None:
                 on_chunk(res.labels, chunk.srcs[np.asarray(g)], offset)
+            if on_mask is not None:
+                on_mask(mask, chunk.srcs[np.asarray(g)])
             real = np.asarray(g) < chunk.n_real
             real_idx = chunk.srcs[np.asarray(g)[real]]
             l_counts[real_idx] = np.asarray(l_cnt)[real]

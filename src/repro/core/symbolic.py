@@ -37,6 +37,9 @@ class SymbolicResult:
     supernodes: Optional[np.ndarray] = None   # (n_supernodes, 2) [start, end)
     n_supernodes: int = 0
     mean_supernode_size: float = 0.0
+    # sparse L+U pattern streamed from the fixpoint (collect_pattern=True) —
+    # a storage.CSCPattern; the large-n path's replacement for dense_pattern
+    pattern: Optional[object] = None
 
     @property
     def lu_nnz(self) -> int:
@@ -104,21 +107,93 @@ def detect_supernodes(pattern: np.ndarray, *, max_size: int = 64) -> np.ndarray:
     same nonzero structure and L(j, j-1) != 0 (the SuperLU T2 test).
     Returns an (n_supernodes, 2) array of [start, end) column ranges —
     consumed by supernodal numeric factorization to batch dense updates.
+
+    This is the dense *test oracle* for the streamed fingerprint detector
+    (repro.supernodes); it is vectorized — one shifted-column structure
+    comparison instead of a per-column ``np.array_equal`` loop — but stays
+    bitwise-identical to the serial scan (tests hold it to that contract).
     """
+    pattern = np.asarray(pattern, dtype=bool)
     n = pattern.shape[0]
-    bounds = [0]
-    size = 1
-    for j in range(1, n):
-        same = (pattern[j, j - 1]
-                and size < max_size
-                and bool(np.array_equal(pattern[j:, j], pattern[j:, j - 1])))
-        if same:
-            size += 1
-        else:
-            bounds.append(j)
-            size = 1
-    bounds.append(n)
-    return np.stack([np.array(bounds[:-1]), np.array(bounds[1:])], axis=1)
+    if n == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    # mergeable[j] (j >= 1): L(j:, j) == L(j:, j-1) structurally and
+    # L(j, j-1) != 0.  The suffix comparison vectorizes as "the last row
+    # where adjacent columns disagree sits strictly above row j".
+    diff = pattern[:, 1:] != pattern[:, :-1]            # (n, n-1)
+    rows = np.arange(n, dtype=np.int64)
+    last_mismatch = np.where(diff, rows[:, None], -1).max(axis=0)   # (n-1,)
+    flags = np.zeros(n, dtype=bool)
+    flags[1:] = pattern[rows[1:], rows[1:] - 1] & (last_mismatch < rows[1:])
+    # maximal merge runs, split every max_size columns — identical to the
+    # serial scan's size-counter reset
+    starts = np.flatnonzero(~flags)
+    ends = np.append(starts[1:], n)
+    reps = -(-(ends - starts) // max_size)
+    piece = np.arange(int(reps.sum())) - np.repeat(np.cumsum(reps) - reps, reps)
+    s = np.repeat(starts, reps) + piece * max_size
+    e = np.minimum(s + max_size, np.repeat(ends, reps))
+    return np.stack([s, e], axis=1)
+
+
+class PatternCollector:
+    """Streams the filled L+U structure out of the fixpoint as sparse rows.
+
+    ``update`` consumes the (G, n) bool fill mask of each converged chunk
+    exactly as ``run_multisource(on_mask=...)`` emits it (padded duplicate
+    sources allowed; re-delivery is idempotent) and immediately reduces each
+    row to its column-index list, so peak host memory is O(nnz(L+U)) + one
+    chunk mask — never a dense (n, n) pattern.  ``to_csc`` transposes the
+    row lists into the ``storage.CSCPattern`` the packed numeric path
+    consumes; this is the large-n replacement for ``core.gsofa
+    .dense_pattern`` (ROADMAP follow-up: CSC extraction straight from the
+    fixpoint).
+    """
+
+    def __init__(self, n: int):
+        self.n = n
+        self.row_cols: list = [None] * n
+        self.seen = np.zeros(n, dtype=bool)
+
+    @property
+    def complete(self) -> bool:
+        return bool(self.seen.all())
+
+    def update(self, mask, srcs: np.ndarray) -> int:
+        """Accumulate one chunk's fill mask; returns #new rows consumed."""
+        srcs = np.asarray(srcs, dtype=np.int64)
+        _, first = np.unique(srcs, return_index=True)
+        keep = first[~self.seen[srcs[first]]]
+        if len(keep) == 0:
+            return 0
+        mask = np.asarray(mask, dtype=bool)
+        for i in keep:
+            src = int(srcs[i])
+            row = np.flatnonzero(mask[i]).astype(np.int64)
+            d = np.searchsorted(row, src)
+            if d >= len(row) or row[d] != src:      # diagonal always present
+                row = np.insert(row, d, src)
+            self.row_cols[src] = row
+            self.seen[src] = True
+        return len(keep)
+
+    def to_csc(self):
+        """CSR row lists -> ``storage.CSCPattern`` (sorted rows per column)."""
+        from repro.numeric.storage import CSCPattern
+
+        if not self.complete:
+            missing = np.flatnonzero(~self.seen)
+            raise ValueError(f"pattern incomplete: rows {missing[:8].tolist()}"
+                             f"... of {self.n} were never collected")
+        counts = np.array([len(r) for r in self.row_cols], dtype=np.int64)
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), counts)
+        cols = (np.concatenate(self.row_cols) if self.n
+                else np.zeros(0, dtype=np.int64))
+        order = np.lexsort((rows, cols))
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(indptr, cols + 1, 1)
+        return CSCPattern(n=self.n, indptr=np.cumsum(indptr),
+                          rowind=rows[order])
 
 
 def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
@@ -129,7 +204,8 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
                        graph: Optional[SymbolicGraph] = None,
                        detect_supernodes: bool = False,
                        supernode_relax: int = 0,
-                       supernode_max_size: int = 64) -> SymbolicResult:
+                       supernode_max_size: int = 64,
+                       collect_pattern: bool = False) -> SymbolicResult:
     """Compute the L/U nonzero structure of ``a`` (single host; for multi-device
     use core.distributed / runtime.scheduler).
 
@@ -140,6 +216,12 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
     ``supernodes`` / ``n_supernodes`` / ``mean_supernode_size``.
     ``supernode_relax`` is the T3 merge tolerance (0 = exact T2);
     ``supernode_max_size`` caps panel width like the serial post-pass.
+
+    With ``collect_pattern=True`` the sparse L+U structure streams out of
+    the same fixpoint chunks (``PatternCollector``): the result gains
+    ``pattern``, a ``storage.CSCPattern`` in O(nnz(L+U)) host memory —
+    what ``repro.analyze`` feeds the packed numeric path at any n, with no
+    dense (n, n) gather anywhere (DESIGN.md §10).
     """
     t0 = time.perf_counter()
     if graph is None:
@@ -154,6 +236,8 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
 
         fp = ColumnFingerprints(n=a.n)
         on_chunk = fp.update
+    collector = PatternCollector(n=a.n) if collect_pattern else None
+    on_mask = collector.update if collector is not None else None
 
     ckpt = ChunkCheckpointer(checkpoint_path, a.n) if checkpoint_path else None
     if ckpt is not None and ckpt.covered.any():
@@ -169,7 +253,7 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
             res = run_multisource(graph, concurrency=eff_c, backend=backend,
                                   combined=combined, bubble=bubble,
                                   use_arena=use_arena, sources=srcs,
-                                  on_chunk=on_chunk)
+                                  on_chunk=on_chunk, on_mask=on_mask)
             l_counts[srcs] = res.l_counts[srcs]
             u_counts[srcs] = res.u_counts[srcs]
             supersteps += res.supersteps
@@ -186,24 +270,31 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         ms = run_multisource(graph, concurrency=eff_c, backend=backend,
                              combined=combined, bubble=bubble,
                              use_arena=use_arena, budget_bytes=budget_bytes,
-                             on_chunk=on_chunk)
+                             on_chunk=on_chunk, on_mask=on_mask)
         if ckpt is not None:
             for start in range(0, a.n, eff_c):
                 srcs = np.arange(start, min(start + eff_c, a.n), dtype=np.int64)
                 ckpt.record(start, srcs, ms.l_counts[srcs], ms.u_counts[srcs])
 
+    # checkpoint restart restored some chunks' counts without their label
+    # matrices; re-run those sources once for whichever collectors miss them
+    # (update() is idempotent, so one shared re-run feeds both)
+    missing = np.zeros(a.n, dtype=bool)
+    if fp is not None and not fp.complete:
+        missing |= ~fp.seen
+    if collector is not None and not collector.complete:
+        missing |= ~collector.seen
+    if missing.any():
+        run_multisource(graph, concurrency=eff_c, backend=backend,
+                        combined=combined, bubble=bubble,
+                        use_arena=use_arena,
+                        sources=np.flatnonzero(missing).astype(np.int32),
+                        on_chunk=on_chunk, on_mask=on_mask)
+
     sn_ranges = None
     sn_count = 0
     sn_mean = 0.0
     if fp is not None:
-        if not fp.complete:
-            # checkpoint restart restored some chunks' counts without their
-            # label matrices; re-run those sources fingerprint-only
-            missing = np.flatnonzero(~fp.seen).astype(np.int32)
-            run_multisource(graph, concurrency=eff_c, backend=backend,
-                            combined=combined, bubble=bubble,
-                            use_arena=use_arena, sources=missing,
-                            on_chunk=fp.update)
         from repro.supernodes import detect_from_fingerprints, supernode_stats
 
         sn_ranges = detect_from_fingerprints(
@@ -224,4 +315,5 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         memory_report=aux_memory_report(graph, ms.concurrency, backend),
         supernodes=sn_ranges, n_supernodes=sn_count,
         mean_supernode_size=sn_mean,
+        pattern=collector.to_csc() if collector is not None else None,
     )

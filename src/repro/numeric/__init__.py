@@ -18,23 +18,26 @@ supernodal triangular substitution + iterative refinement on the factors.
 ``factorize_columns`` is the column-at-a-time baseline the benchmark
 (``benchmarks/bench_numeric.py``) compares against.
 """
-from repro.numeric.schedule import PanelSchedule, build_schedule
+from repro.numeric.schedule import (
+    PanelMaps, PanelSchedule, build_gather_maps, build_schedule,
+)
 from repro.numeric.solve import (
     SolveResult, SolveSchedule, backward_substitute, build_solve_schedule,
     forward_substitute, solve, solve_factored,
 )
 from repro.numeric.storage import (
-    CSCPattern, PanelStore, uniform_supernodes,
+    CSCPattern, CsrScatterMaps, PanelStore, uniform_supernodes,
 )
 from repro.numeric.supernodal import (
-    NumericResult, factorize_columns, numeric_factorize,
+    NumericResult, factor_on_store, factorize_columns, numeric_factorize,
 )
 from repro.sparse.numeric import ZeroPivotError
 
 __all__ = [
-    "PanelSchedule", "build_schedule",
-    "CSCPattern", "PanelStore", "uniform_supernodes",
-    "NumericResult", "factorize_columns", "numeric_factorize",
+    "PanelMaps", "PanelSchedule", "build_gather_maps", "build_schedule",
+    "CSCPattern", "CsrScatterMaps", "PanelStore", "uniform_supernodes",
+    "NumericResult", "factor_on_store", "factorize_columns",
+    "numeric_factorize",
     "SolveResult", "SolveSchedule", "build_solve_schedule",
     "forward_substitute", "backward_substitute", "solve", "solve_factored",
     "ZeroPivotError",

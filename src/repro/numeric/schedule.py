@@ -27,7 +27,7 @@ O(nnz(L+U)) packed path feeds it, nothing here materializes (n, n)):
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -65,6 +65,54 @@ class PanelSchedule:
             "n_updates": n_updates,
             "balance_ratio": self.partition.balance_ratio,
         }
+
+
+@dataclasses.dataclass
+class PanelMaps:
+    """Value-independent row-index maps of one panel's ancestor updates.
+
+    Everything ``supernodal._factor_panel`` would otherwise re-derive with
+    ``searchsorted`` on every factorization: the concatenated ancestor
+    diagonal rows, each ancestor's (idx, hit) gather map for its L strip at
+    those rows and at the panel's >= s rows, and the scatter map of the
+    solved U rows back into the panel block.  Built once per analysis
+    (``build_gather_maps``), replayed on every ``LUPlan.factorize`` —
+    bitwise-identical math, none of the map reconstruction.
+    """
+
+    anc_rows: np.ndarray                 # concatenated ancestor diag rows
+    offs: np.ndarray                     # (len(anc)+1,) strip offsets
+    strip_maps: List[tuple]              # per ancestor: (idx, hit) at anc_rows[r0:]
+    below_maps: List[tuple]              # per ancestor: (idx, hit) at rows >= s
+    idx_j: np.ndarray                    # scatter of solved U(anc, J) into block j
+    hit_j: np.ndarray
+
+
+def build_panel_maps(store, schedule: PanelSchedule,
+                     j: int) -> Optional[PanelMaps]:
+    """Maps for one panel (``None`` when it has no ancestors)."""
+    anc = schedule.ancestors[j]
+    if not len(anc):
+        return None
+    widths = schedule.supernodes[anc, 1] - schedule.supernodes[anc, 0]
+    offs = np.concatenate([[0], np.cumsum(widths)])
+    anc_rows = np.concatenate([np.arange(ks, ke)
+                               for ks, ke in schedule.supernodes[anc]])
+    below = store.rows[j][int(store.diag[j]):]
+    strip_maps = [store.local_rows(int(k), anc_rows[offs[idx]:])
+                  for idx, k in enumerate(anc)]
+    below_maps = [store.local_rows(int(k), below) for k in anc]
+    idx_j, hit_j = store.local_rows(j, anc_rows)
+    return PanelMaps(anc_rows=anc_rows, offs=offs, strip_maps=strip_maps,
+                     below_maps=below_maps, idx_j=idx_j, hit_j=hit_j)
+
+
+def build_gather_maps(store, schedule: PanelSchedule) -> List[Optional[PanelMaps]]:
+    """Precompute every panel's ancestor gather/scatter maps from the packed
+    row structure — the value-independent half of ``supernodal
+    ._factor_panel``, built once per analysis and replayed per factorize."""
+    return [build_panel_maps(store, schedule, j)
+            for j in range(schedule.n_panels)]
 
 
 def _validate_supernodes(supernodes: np.ndarray, n: int) -> np.ndarray:

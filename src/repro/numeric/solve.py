@@ -147,22 +147,39 @@ def solve_factored(num: NumericResult, b: np.ndarray) -> np.ndarray:
 
 @dataclasses.dataclass
 class SolveResult:
-    """Solution + convergence history of one ``solve`` call."""
+    """Solution + convergence history of one ``solve`` call.
+
+    Timing is split so factorization is never conflated with substitution:
+    ``factor_s`` is the numeric factorization built *by this call* (0.0 when
+    a prebuilt ``num`` was reused), ``solve_s`` the substitution +
+    refinement sweeps.  For multi-RHS solves ``x`` is (n, k) and each
+    ``residuals`` entry is the worst (max) per-column relative residual.
+    """
 
     x: np.ndarray
     residuals: List[float]       # relative 2-norm residuals: initial solve,
                                  # then after each *accepted* refinement
     num: NumericResult
-    elapsed_s: float
+    factor_s: float              # factorization time inside this call
+    solve_s: float               # substitution + refinement time
     refine_accepted: int
 
     @property
     def residual(self) -> float:
         return self.residuals[-1]
 
+    @property
+    def elapsed_s(self) -> float:
+        return self.factor_s + self.solve_s
 
-def _residual(matvec, x: np.ndarray, b: np.ndarray, b_norm: float) -> float:
-    return float(np.linalg.norm(b - matvec(x)) / b_norm)
+
+def _col_residuals(matvec, x: np.ndarray, b: np.ndarray,
+                   b_norms: np.ndarray) -> np.ndarray:
+    """(k,) per-column relative 2-norm residuals ((1,) for vector RHS)."""
+    r = b - matvec(x)
+    if r.ndim == 1:
+        return np.array([np.linalg.norm(r)]) / b_norms
+    return np.linalg.norm(r, axis=0) / b_norms
 
 
 def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
@@ -175,24 +192,31 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     """Solve A x = b through the symbolic -> packed-numeric -> substitution
     pipeline, with iterative refinement.
 
+    ``b`` is a single right-hand side (n,) or a multi-RHS block (n, k) —
+    the substitution sweeps and the refinement matvec are batched over the
+    columns, so k systems cost one factorization plus k-column triangular
+    solves (the circuit-simulation refactorization regime, DESIGN.md §10).
+
     ``a``/``sym``/``values``/``pattern``/``supernodes`` are forwarded to
     ``numeric_factorize`` (``values`` dense (n, n) or CSR-aligned (nnz,);
     defaults to ``generic_values_csr(a)``); pass ``num`` to reuse an
     existing factorization.  ``refine_iters`` bounds the refinement sweeps;
-    a correction is accepted only if it lowers the relative residual, so
-    ``residuals`` is non-increasing; refinement stops early once the
-    residual is at or below ``refine_tol`` (default 1e-14 — a
-    well-conditioned solve lands at machine precision immediately and skips
-    the extra substitution + matvec sweeps; pass ``refine_tol=0.0`` to
-    squeeze every accepted correction).
+    a correction is accepted per column only if it lowers that column's
+    relative residual, so the recorded (worst-column) ``residuals`` history
+    is non-increasing; refinement stops early once every column is at or
+    below ``refine_tol`` (default 1e-14 — a well-conditioned solve lands at
+    machine precision immediately and skips the extra substitution + matvec
+    sweeps; pass ``refine_tol=0.0`` to squeeze every accepted correction).
 
     Raises ``ZeroPivotError`` if the factorization hits a zero/near-zero
     pivot (propagated from ``numeric_factorize``).
     """
     t0 = time.perf_counter()
     b = np.asarray(b, dtype=np.float64)
-    if b.shape != (a.n,):
-        raise ValueError(f"b must be ({a.n},), got {b.shape}")
+    if (b.ndim not in (1, 2) or b.shape[0] != a.n
+            or (b.ndim == 2 and b.shape[1] == 0)):
+        raise ValueError(f"b must be ({a.n},) or ({a.n}, k>=1), "
+                         f"got {b.shape}")
     if num is not None and values is None:
         # refinement computes residuals against `values`; silently defaulting
         # to generic values here would iterate against a different matrix
@@ -203,10 +227,12 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     if values is None:
         values = generic_values_csr(a)
     values = np.asarray(values, dtype=np.float64)
+    factor_s = 0.0
     if num is None:
         num = numeric_factorize(a, sym, values=values, pattern=pattern,
                                 supernodes=supernodes, n_bins=n_bins,
                                 policy=policy, backend=backend)
+        factor_s = time.perf_counter() - t0
 
     if values.ndim == 2:
         def matvec(x):
@@ -217,23 +243,29 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
 
     if refine_tol is None:
         refine_tol = 1e-14
-    b_norm = float(np.linalg.norm(b))
-    if b_norm == 0.0:
-        b_norm = 1.0
+    b_norms = (np.array([np.linalg.norm(b)]) if b.ndim == 1
+               else np.linalg.norm(b, axis=0))
+    b_norms = np.where(b_norms == 0.0, 1.0, b_norms)
     x = solve_factored(num, b)
-    residuals = [_residual(matvec, x, b, b_norm)]
+    res_cols = _col_residuals(matvec, x, b, b_norms)
+    residuals = [float(res_cols.max())]
     accepted = 0
     for _ in range(max(0, refine_iters)):
-        if residuals[-1] <= refine_tol:
+        if res_cols.max() <= refine_tol:
             break
         r = b - matvec(x)
         x_try = x + solve_factored(num, r)
-        res_try = _residual(matvec, x_try, b, b_norm)
-        if res_try >= residuals[-1]:
-            break                      # no longer improving — keep best x
-        x = x_try
-        residuals.append(res_try)
+        res_try = _col_residuals(matvec, x_try, b, b_norms)
+        improve = res_try < res_cols
+        if not improve.any():
+            break                      # no column improving — keep best x
+        if x.ndim == 1:
+            x = x_try
+        else:                          # accept only the improving columns
+            x[:, improve] = x_try[:, improve]
+        res_cols = np.where(improve, res_try, res_cols)
+        residuals.append(float(res_cols.max()))
         accepted += 1
-    return SolveResult(x=x, residuals=residuals, num=num,
-                       elapsed_s=time.perf_counter() - t0,
+    return SolveResult(x=x, residuals=residuals, num=num, factor_s=factor_s,
+                       solve_s=time.perf_counter() - t0 - factor_s,
                        refine_accepted=accepted)

@@ -135,6 +135,28 @@ def uniform_supernodes(n: int, width: int) -> np.ndarray:
     return np.stack([starts, ends], axis=1)
 
 
+@dataclasses.dataclass(frozen=True)
+class CsrScatterMaps:
+    """Precomputed CSR -> packed-block scatter of one (matrix, store
+    structure) pair: value-independent, built once by ``PanelStore.csr_maps``
+    and replayed by ``set_csr_mapped`` on every refactorization (the
+    plan/factor API, DESIGN.md §10).
+
+    ``row_idx``/``col_idx``/``pos`` are parallel and grouped by target
+    panel (``panel_ptr`` bounds): CSR slot ``pos[t]`` lands at
+    ``blocks[j][row_idx[t], col_idx[t]]`` for ``panel_ptr[j] <= t <
+    panel_ptr[j+1]``.  ``missed`` holds CSR positions whose (row, col) slot
+    the store lacks — nonzero values there escape the symbolic prediction.
+    """
+
+    nnz: int
+    panel_ptr: np.ndarray  # (n_panels+1,) int64 per-panel segment bounds
+    row_idx: np.ndarray    # (hits,) int64 local block row
+    col_idx: np.ndarray    # (hits,) int64 local block column
+    pos: np.ndarray        # (hits,) int64 CSR value position
+    missed: np.ndarray     # (misses,) int64 CSR positions with no slot
+
+
 class PanelStore:
     """Packed CSC-panel working storage: one (rows_J, w_J) block per panel.
 
@@ -175,6 +197,24 @@ class PanelStore:
             self.in_pattern.append(mask)
             self.diag[j] = np.searchsorted(rows, s)
 
+    @classmethod
+    def from_structure(cls, template: "PanelStore") -> "PanelStore":
+        """A fresh store sharing ``template``'s value-independent structure
+        (rows / in_pattern / diag / pattern — read-only by contract) with
+        newly allocated zero blocks.  This is how ``LUPlan.factorize``
+        reuses one analysis across many factorizations without rebuilding
+        the per-column structure scan."""
+        new = cls.__new__(cls)
+        new.n = template.n
+        new.pattern = template.pattern
+        new.supernodes = template.supernodes
+        new.sup_of_col = template.sup_of_col
+        new.rows = template.rows
+        new.in_pattern = template.in_pattern
+        new.diag = template.diag
+        new.blocks = [np.zeros_like(b) for b in template.blocks]
+        return new
+
     # -- sizing ------------------------------------------------------------
     @property
     def n_panels(self) -> int:
@@ -209,29 +249,67 @@ class PanelStore:
 
     def set_csr(self, a, values: np.ndarray) -> float:
         """Scatter CSR-aligned values (``values[p]`` pairs ``a.indices[p]``;
-        sparse path — never touches (n, n)).  Returns the largest |value|
-        whose (row, col) slot is absent from the store."""
-        values = np.asarray(values, dtype=np.float64)
-        if values.shape != (a.nnz,):
-            raise ValueError(f"CSR values must be ({a.nnz},), got "
-                             f"{values.shape}")
+        sparse path — never touches (n, n)), zeroing all other slots.
+        Returns the largest |value| whose (row, col) slot is absent from
+        the store.  One-shot form of ``csr_maps`` + ``set_csr_mapped`` —
+        a single scatter implementation, so the one-shot and plan-based
+        paths cannot diverge."""
+        return self.set_csr_mapped(values, self.csr_maps(a))
+
+    def csr_maps(self, a) -> CsrScatterMaps:
+        """Precompute the CSR -> block scatter (the value-independent half
+        of ``set_csr``); replayed by ``set_csr_mapped`` per factorization."""
         rows_a = np.repeat(np.arange(a.n, dtype=np.int64),
                            np.diff(a.indptr))
         cols_a = a.indices.astype(np.int64)
-        dropped = 0.0
         order = np.argsort(self.sup_of_col[cols_a], kind="stable")
-        ra, ca, va = rows_a[order], cols_a[order], values[order]
+        ra, ca = rows_a[order], cols_a[order]
         bounds = np.searchsorted(self.sup_of_col[ca],
                                  np.arange(self.n_panels + 1))
+        row_idx, col_idx, pos, missed = [], [], [], []
+        panel_ptr = np.zeros(self.n_panels + 1, dtype=np.int64)
         for j, (s, e) in enumerate(self.supernodes):
             lo, hi = bounds[j], bounds[j + 1]
-            if lo == hi:
-                continue
-            idx_c, hit = self.local_rows(j, ra[lo:hi])
-            self.blocks[j][idx_c[hit], ca[lo:hi][hit] - s] = va[lo:hi][hit]
-            if not hit.all():
-                dropped = max(dropped, float(np.abs(va[lo:hi][~hit]).max()))
-        return dropped
+            hits = 0
+            if lo < hi:
+                idx_c, hit = self.local_rows(j, ra[lo:hi])
+                row_idx.append(idx_c[hit])
+                col_idx.append(ca[lo:hi][hit] - s)
+                pos.append(order[lo:hi][hit])
+                missed.append(order[lo:hi][~hit])
+                hits = int(hit.sum())
+            panel_ptr[j + 1] = panel_ptr[j] + hits
+
+        def cat(parts):
+            return (np.concatenate(parts) if parts
+                    else np.zeros(0, dtype=np.int64))
+
+        return CsrScatterMaps(nnz=int(a.nnz), panel_ptr=panel_ptr,
+                              row_idx=cat(row_idx), col_idx=cat(col_idx),
+                              pos=cat(pos), missed=cat(missed))
+
+    def set_csr_mapped(self, values: np.ndarray, maps: CsrScatterMaps, *,
+                       zero: bool = True) -> float:
+        """Replay a precomputed scatter (bitwise-identical to ``set_csr``),
+        zeroing the blocks first so the same store buffers can be reused
+        across factorizations (pass ``zero=False`` for blocks known to be
+        freshly allocated — skips a redundant O(nnz) memset).  Returns the
+        largest |value| with no slot."""
+        values = np.asarray(values, dtype=np.float64)
+        if values.shape != (maps.nnz,):
+            raise ValueError(f"CSR values must be ({maps.nnz},), got "
+                             f"{values.shape}")
+        if zero:
+            for block in self.blocks:
+                block.fill(0.0)
+        for j in range(self.n_panels):
+            lo, hi = maps.panel_ptr[j], maps.panel_ptr[j + 1]
+            if lo < hi:
+                self.blocks[j][maps.row_idx[lo:hi],
+                               maps.col_idx[lo:hi]] = values[maps.pos[lo:hi]]
+        if maps.missed.size:
+            return float(np.abs(values[maps.missed]).max())
+        return 0.0
 
     # -- row-index-mapped gathers -------------------------------------------
     def local_rows(self, j: int, take: np.ndarray
@@ -246,7 +324,14 @@ class PanelStore:
         """(len(take), w_j) dense gather of panel j at global rows ``take``;
         rows absent from the panel's structure are structural zeros."""
         idx, hit = self.local_rows(j, take)
-        out = np.zeros((len(take), self.blocks[j].shape[1]),
+        return self.gather_rows_mapped(j, idx, hit)
+
+    def gather_rows_mapped(self, j: int, idx: np.ndarray,
+                           hit: np.ndarray) -> np.ndarray:
+        """``gather_rows`` with the searchsorted row map precomputed — the
+        hot path of plan-based refactorization (schedule.build_gather_maps
+        caches the (idx, hit) pairs once per analysis)."""
+        out = np.zeros((len(idx), self.blocks[j].shape[1]),
                        dtype=np.float64)
         out[hit] = self.blocks[j][idx[hit]]
         return out

@@ -51,7 +51,7 @@ from typing import Optional, Tuple
 import numpy as np
 from scipy.linalg import solve_triangular
 
-from repro.numeric.schedule import PanelSchedule, build_schedule
+from repro.numeric.schedule import PanelSchedule, build_panel_maps, build_schedule
 from repro.numeric.storage import CSCPattern, PanelStore
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import (
@@ -132,8 +132,15 @@ def _solve_upper_right(block: np.ndarray, rhs: np.ndarray) -> np.ndarray:
 
 
 def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
-                  piv_tol: float, backend: str) -> Tuple[int, int, float]:
+                  piv_tol: float, backend: str,
+                  maps=None) -> Tuple[int, int, float]:
     """Factor panel j in place on its packed block.
+
+    ``maps`` (a ``schedule.PanelMaps``) supplies the panel's precomputed
+    row-index gather/scatter maps — the plan/factor API builds them once per
+    analysis; when omitted they are derived on the fly (one-shot path).  The
+    float operations are identical either way, so the factors are bitwise
+    the same.
 
     Returns (#ancestor updates, trailing flops, largest |value| the solves
     produced on a row absent from the panel's structure — nonzero beyond
@@ -148,10 +155,10 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
     dropped = 0.0
 
     if len(anc):
-        widths = schedule.supernodes[anc, 1] - schedule.supernodes[anc, 0]
-        offs = np.concatenate([[0], np.cumsum(widths)])
-        anc_rows = np.concatenate([np.arange(ks, ke)
-                                   for ks, ke in schedule.supernodes[anc]])
+        if maps is None:
+            maps = build_panel_maps(store, schedule, j)
+        offs = maps.offs
+        anc_rows = maps.anc_rows
 
         # 1. ascending per-ancestor solves + rank-|K| updates on the gathered
         #    target rows; each ancestor's L strip (its own diagonal block +
@@ -159,14 +166,14 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
         #    only while in use, so working memory stays O(K * max_w) — never
         #    a dense (K, K) ancestor sub-matrix (rows absent from a panel's
         #    structure gather as exact zeros)
-        b = store.gather_rows(j, anc_rows)            # (K, w) gathered X rows
+        b = store.gather_rows_mapped(j, maps.idx_j, maps.hit_j)  # (K, w)
         for idx, k in enumerate(anc):
             r0, r1 = offs[idx], offs[idx + 1]
-            strip = store.gather_rows(int(k), anc_rows[r0:])
+            strip = store.gather_rows_mapped(int(k), *maps.strip_maps[idx])
             b[r0:r1] = _solve_unit_lower(strip[:r1 - r0], b[r0:r1])
             if r1 < len(anc_rows):
                 b[r1:] -= strip[r1 - r0:] @ b[r0:r1]
-        idx_j, hit_j = store.local_rows(j, anc_rows)  # solved U(anc, J)
+        idx_j, hit_j = maps.idx_j, maps.hit_j         # solved U(anc, J)
         block[idx_j[hit_j]] = b[hit_j]
         if not hit_j.all():
             miss = np.abs(b[~hit_j])
@@ -179,7 +186,8 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
         below = store.rows[j][d:]
         lp = np.empty((len(below), len(anc_rows)), dtype=np.float64)
         for idx, k in enumerate(anc):
-            lp[:, offs[idx]:offs[idx + 1]] = store.gather_rows(int(k), below)
+            lp[:, offs[idx]:offs[idx + 1]] = store.gather_rows_mapped(
+                int(k), *maps.below_maps[idx])
         acc = block[d:]
         if backend == "kernel":
             from repro.kernels import ops as kops
@@ -195,6 +203,78 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
     if block.shape[0] > d + w:
         block[d + w:] = _solve_upper_right(block[d:d + w], block[d + w:])
     return len(anc), flops, dropped
+
+
+def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
+                    store: PanelStore, schedule: PanelSchedule, *,
+                    backend: str = "numpy",
+                    piv_tol: Optional[float] = None,
+                    check_pattern: bool = True,
+                    pattern_tol: Optional[float] = None,
+                    maps=None, csr_maps=None,
+                    store_is_zeroed: bool = False) -> NumericResult:
+    """Scatter ``values`` into ``store`` and run the level-scheduled panel
+    sweep — the value-dependent core shared by one-shot
+    ``numeric_factorize`` and plan-based ``LUPlan.factorize`` (which passes
+    precomputed ``maps``/``csr_maps`` so nothing value-independent is
+    rebuilt).  Both paths execute identical float operations, so the
+    factors are bitwise-identical by construction."""
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
+    n = store.n
+    if pattern_tol is None:
+        # float32 MXU updates leave f32-roundoff garbage at the explicit
+        # zeros of relaxed panels; the float64 path stays at f64 roundoff
+        pattern_tol = 1e-4 if backend == "kernel" else 1e-8
+    t0 = time.perf_counter()
+
+    values = np.asarray(values, dtype=np.float64)
+    if values.ndim == 2:
+        if values.shape != (n, n):
+            raise ValueError(f"values must be ({n}, {n}), got {values.shape}")
+        input_outside = store.set_dense(values)
+    else:
+        if csr_maps is None and a is None:
+            raise ValueError(
+                "CSR-aligned values need the matrix `a` or precomputed "
+                "`csr_maps` to locate their slots")
+        nnz = csr_maps.nnz if csr_maps is not None else a.nnz
+        if values.shape != (nnz,):
+            raise ValueError(
+                f"values must be dense ({n}, {n}) or CSR-aligned ({nnz},), "
+                f"got {values.shape}")
+        input_outside = (
+            store.set_csr_mapped(values, csr_maps, zero=not store_is_zeroed)
+            if csr_maps is not None else store.set_csr(a, values))
+
+    scale = float(np.abs(values).max()) if values.size else 0.0
+    if piv_tol is None:
+        piv_tol = pivot_tolerance(scale)
+
+    n_updates = 0
+    gemm_flops = 0
+    dropped_max = input_outside
+    for level in schedule.levels:
+        for j in level:
+            upd, flops, dropped = _factor_panel(
+                store, schedule, int(j), piv_tol, backend,
+                maps=maps[j] if maps is not None else None)
+            n_updates += upd
+            gemm_flops += flops
+            dropped_max = max(dropped_max, dropped)
+
+    outside_max = max(store.padding_max(), dropped_max)
+    if check_pattern and outside_max > pattern_tol * scale:
+        raise ValueError(
+            f"numeric factorization escaped the symbolic prediction: "
+            f"|{outside_max:.3e}| outside the pattern (tol "
+            f"{pattern_tol * scale:.3e}) — symbolic under-prediction")
+    store.zero_padding()
+
+    return NumericResult(n=n, store=store, schedule=schedule, backend=backend,
+                         elapsed_s=time.perf_counter() - t0,
+                         n_updates=n_updates, gemm_flops=gemm_flops,
+                         outside_max=outside_max)
 
 
 def numeric_factorize(a: CSRMatrix, sym=None, *,
@@ -229,13 +309,14 @@ def numeric_factorize(a: CSRMatrix, sym=None, *,
     Raises ``ZeroPivotError`` (global column index) on zero/near-zero pivots
     and ``ValueError`` if any value above ``pattern_tol * scale`` escapes the
     symbolic prediction (the ``validate_symbolic`` contract).
+
+    This rebuilds the schedule, the packed store structure, and the gather
+    maps from scratch on *every* call; refactorization workloads (same
+    pattern, new values) should use ``repro.analyze`` once and
+    ``LUPlan.factorize`` per value set instead (repro.api, DESIGN.md §10).
     """
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
-    if pattern_tol is None:
-        # float32 MXU updates leave f32-roundoff garbage at the explicit
-        # zeros of relaxed panels; the float64 path stays at f64 roundoff
-        pattern_tol = 1e-4 if backend == "kernel" else 1e-8
     t0 = time.perf_counter()
     n = a.n
 
@@ -281,37 +362,12 @@ def numeric_factorize(a: CSRMatrix, sym=None, *,
 
     schedule = build_schedule(pattern, supernodes, n_bins=n_bins,
                               policy=policy)
-    scale = float(np.abs(values).max()) if values.size else 0.0
-    if piv_tol is None:
-        piv_tol = pivot_tolerance(scale)
-
     store = PanelStore(pattern, schedule.supernodes)
-    input_outside = (store.set_dense(values) if values.ndim == 2
-                     else store.set_csr(a, values))
-
-    n_updates = 0
-    gemm_flops = 0
-    dropped_max = input_outside
-    for level in schedule.levels:
-        for j in level:
-            upd, flops, dropped = _factor_panel(store, schedule, int(j),
-                                                piv_tol, backend)
-            n_updates += upd
-            gemm_flops += flops
-            dropped_max = max(dropped_max, dropped)
-
-    outside_max = max(store.padding_max(), dropped_max)
-    if check_pattern and outside_max > pattern_tol * scale:
-        raise ValueError(
-            f"numeric factorization escaped the symbolic prediction: "
-            f"|{outside_max:.3e}| outside the pattern (tol "
-            f"{pattern_tol * scale:.3e}) — symbolic under-prediction")
-    store.zero_padding()
-
-    return NumericResult(n=n, store=store, schedule=schedule, backend=backend,
-                         elapsed_s=time.perf_counter() - t0,
-                         n_updates=n_updates, gemm_flops=gemm_flops,
-                         outside_max=outside_max)
+    result = factor_on_store(a, values, store, schedule, backend=backend,
+                             piv_tol=piv_tol, check_pattern=check_pattern,
+                             pattern_tol=pattern_tol)
+    result.elapsed_s = time.perf_counter() - t0
+    return result
 
 
 def factorize_columns(values: np.ndarray, pattern: np.ndarray, *,

@@ -143,6 +143,37 @@ def banded_full(n: int, *, band: int = 8) -> CSRMatrix:
     return csr_from_coo(n, rows[keep], cols[keep])
 
 
+def bordered_block_diagonal(n: int, *, block: int = 16, border: int = 64,
+                            couple: int = 4, seed: int = 0) -> CSRMatrix:
+    """Bordered block-diagonal (BBD) matrix: independent dense-ish diagonal
+    blocks plus ``border`` global rail rows/columns at the *end* of the
+    index space, each coupled to ``couple`` random interior positions.
+
+    This is the canonical partitioned-circuit structure (SPICE-style BBD
+    ordering): fill stays O(nnz) — confined to the blocks, the rail
+    rows/columns, and the border corner — and the graph diameter is tiny
+    (any interior vertex reaches anything else only through the rails), so
+    the symbolic fixpoint converges in a handful of supersteps at any n.
+    The large-n generator for driving the full analyze -> refactorize
+    pipeline end to end."""
+    rng = np.random.default_rng(seed)
+    interior = n - border
+    if interior <= 0:
+        raise ValueError(f"need n > border, got n={n} border={border}")
+    # dense-ish random blocks: ~3 entries per row inside each block
+    b_rows = rng.integers(0, interior, size=3 * interior)
+    b_cols = ((b_rows // block) * block
+              + rng.integers(0, block, size=3 * interior))
+    b_cols = np.minimum(b_cols, interior - 1)
+    # rails: border row h couples symmetrically to `couple` interior spots
+    rails = np.repeat(np.arange(interior, n), couple)
+    tied = rng.integers(0, interior, size=border * couple)
+    rows = np.concatenate([b_rows, b_cols, rails, tied])
+    cols = np.concatenate([b_cols, b_rows, tied, rails])
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
 def banded_random(n: int, *, band: int = 8, fill: float = 0.5, seed: int = 0) -> CSRMatrix:
     rng = np.random.default_rng(seed)
     m = int(n * band * fill)

@@ -84,12 +84,19 @@ def generic_values_csr(a: CSRMatrix, seed: int = 0) -> np.ndarray:
 
 def csr_matvec(a: CSRMatrix, vals: np.ndarray, x: np.ndarray) -> np.ndarray:
     """y = A @ x with CSR-aligned values — the O(nnz) matvec iterative
-    refinement uses on the sparse path."""
+    refinement uses on the sparse path.  ``x`` may be a single vector (n,)
+    or a multi-RHS block (n, k); the result matches its shape."""
     vals = np.asarray(vals, dtype=np.float64)
     x = np.asarray(x, dtype=np.float64)
     row_of = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
-    return np.bincount(row_of, weights=vals * x[a.indices],
-                       minlength=a.n)
+    if x.ndim == 1:
+        return np.bincount(row_of, weights=vals * x[a.indices],
+                           minlength=a.n)
+    out = np.empty((a.n, x.shape[1]), dtype=np.float64)
+    for c in range(x.shape[1]):
+        out[:, c] = np.bincount(row_of, weights=vals * x[a.indices, c],
+                                minlength=a.n)
+    return out
 
 
 def lu_inplace(m: np.ndarray, piv_tol: float, *, col0: int = 0) -> None:

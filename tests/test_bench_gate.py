@@ -137,5 +137,5 @@ def test_committed_baselines_exist_and_gate_runs():
     base = os.path.join(repo, "benchmarks", "baselines")
     names = [f for f in os.listdir(base) if f.endswith(".json")]
     assert {"bench_numeric.json", "bench_supernode.json",
-            "bench_solve.json"} <= set(names)
+            "bench_solve.json", "bench_refactorize.json"} <= set(names)
     assert check_baselines(artifacts_dir=base, baseline_dir=base) == []
