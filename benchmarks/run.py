@@ -14,6 +14,7 @@ Paper-figure map:
   numeric      -> DESIGN.md §4 (supernodal numeric LU vs column-at-a-time)
   solve        -> DESIGN.md §9 (packed CSC-panel storage + solve/refinement)
   refactorize  -> DESIGN.md §10 (plan reuse: analyze once, refactorize many)
+  distributed  -> DESIGN.md §11 (panel placement + 8-device analyze parity)
   roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
@@ -69,7 +70,8 @@ def main() -> None:
 
     only = set(filter(None, args.only.split(",")))
 
-    from benchmarks import (bench_balance, bench_concurrency, bench_numeric,
+    from benchmarks import (bench_balance, bench_concurrency,
+                            bench_distributed, bench_numeric,
                             bench_refactorize, bench_solve, bench_space,
                             bench_speedup, bench_supernode, bench_workload,
                             roofline)
@@ -83,6 +85,7 @@ def main() -> None:
         ("numeric", bench_numeric.main),
         ("solve", bench_solve.main),
         ("refactorize", bench_refactorize.main),
+        ("distributed", bench_distributed.main),
         ("roofline", roofline.main),
     ]
     failures = []

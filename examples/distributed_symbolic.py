@@ -37,6 +37,21 @@ def main() -> None:
     print(f"distributed: balance ratio {res['balance_ratio']:.2f} "
           f"across {res['n_shards']} shard(s)")
 
+    # 1b. the full distributed plan (DESIGN.md §11): sharded analyze ->
+    # placed factorize -> placed solve, bitwise-identical to one device
+    # (run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to
+    # see real sharding on CPU)
+    import repro
+    from repro.sparse.numeric import generic_values_csr
+
+    plan = repro.analyze(a, repro.LUOptions(concurrency=256,
+                                            distribute=True))
+    factor = plan.factorize(generic_values_csr(a))
+    b = np.random.default_rng(0).standard_normal(a.n)
+    sol = factor.solve(b)
+    print(f"plan: {plan.n_devices} device(s), {plan.n_supernodes} panels "
+          f"in {plan.n_levels} levels, residual {sol.residual:.1e}")
+
     # 2. work-stealing scheduler with elastic shrink after 3 chunks
     sched = DynamicScheduler(graph, concurrency=128)
     out = sched.run(drop_devices_after=3)

@@ -6,20 +6,23 @@ Layers: core (the paper's algorithm), sparse (matrix substrate), numeric
 configs + launch (architectures, production mesh, dry-run drivers).
 
 The public entry point is the plan/factor session API (``repro.api``,
-DESIGN.md §10): analyze a structure once, refactorize it many times with
-new values, solve single or multi-RHS systems on the factors::
+DESIGN.md §10-§11): analyze a structure once, refactorize it many times
+with new values, solve single or multi-RHS systems on the factors — on
+one device or with sources and panel work sharded over a device mesh::
 
     import repro
 
-    plan = repro.analyze(a, repro.LUOptions(supernode_relax=2))
+    plan = repro.analyze(a, repro.LUOptions(supernode_relax=2,
+                                            distribute=True))
     factor = plan.factorize(values)        # numeric sweep only
     result = factor.solve(b)               # b: (n,) or (n, k)
 
 The legacy one-shot trio (``symbolic_factorize`` -> ``numeric_factorize``
--> ``solve``) still works for one release behind ``DeprecationWarning``
-shims with bitwise-identical results.
+-> ``solve``) was removed in 1.4.0 after its announced one-release
+``DeprecationWarning`` period; the engines remain importable from
+``repro.core.symbolic`` and ``repro.numeric``.
 """
-__version__ = "1.3.0"
+__version__ = "1.4.0"
 
 _LAZY_EXPORTS = {
     # plan/factor session API (the supported surface)
@@ -27,15 +30,12 @@ _LAZY_EXPORTS = {
     "LUOptions": "repro.api",
     "LUPlan": "repro.api",
     "LUFactorization": "repro.api",
-    # deprecated one-shot shims (DeprecationWarning for one release)
-    "symbolic_factorize": "repro.api",
-    "numeric_factorize": "repro.api",
-    "solve": "repro.api",
     # result / substrate types
     "SymbolicResult": "repro.core.symbolic",
     "NumericResult": "repro.numeric",
     "SolveResult": "repro.numeric",
     "PanelStore": "repro.numeric",
+    "PanelPlacement": "repro.numeric",
     "CSCPattern": "repro.numeric",
     "ZeroPivotError": "repro.sparse.numeric",
     "CSRMatrix": "repro.sparse",

@@ -35,28 +35,40 @@ bitwise-identical to one-shot ``numeric_factorize`` by construction (shared
 ``factor_on_store`` engine).  Plans hold only numpy arrays and plain
 dataclasses, so they pickle — analyses can be cached across processes.
 
-The legacy three-function surface (``repro.symbolic_factorize`` ->
-``repro.numeric_factorize`` -> ``repro.solve``) lives on below as thin
-deprecation shims over the same engines (one release of
-``DeprecationWarning``, bitwise-identical results).
+Analysis and factorization distribute (DESIGN.md §11): pass a device mesh
+(``launch.mesh.make_flat_mesh``) — or set ``LUOptions(distribute=True)``
+to take every visible device — and the symbolic fixpoint shards its
+sources over the mesh inside shard_map while the plan gains a
+``PanelPlacement`` that splits every dependency level's panels into
+per-device segments for factorize and solve.  Factors, solutions, panel
+partitions, and patterns are **bitwise-identical at every device count**
+(the `tests/test_distributed_plan.py` conformance tier runs {1, 2, 8}
+forced host devices), and distributed plans still pickle.
+
+The legacy one-shot trio (``repro.symbolic_factorize`` ->
+``repro.numeric_factorize`` -> ``repro.solve``) was removed in 1.4.0
+after its announced one-release ``DeprecationWarning`` period; the
+engines remain importable from ``repro.core.symbolic`` and
+``repro.numeric``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import List, Optional
 
 import numpy as np
 
 from repro.core.symbolic import SymbolicResult
 from repro.core.symbolic import symbolic_factorize as _symbolic_factorize
-from repro.numeric.schedule import PanelSchedule, build_gather_maps, build_schedule
+from repro.numeric.schedule import (
+    PanelPlacement, PanelSchedule, build_gather_maps, build_placement,
+    build_schedule,
+)
 from repro.numeric.solve import SolveResult, SolveSchedule, build_solve_schedule
 from repro.numeric.solve import solve as _solve
 from repro.numeric.storage import CSCPattern, CsrScatterMaps, PanelStore
 from repro.numeric.supernodal import NumericResult, factor_on_store
-from repro.numeric.supernodal import numeric_factorize as _numeric_factorize
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import generic_values_csr
 
@@ -85,6 +97,12 @@ class LUOptions:
     ``check_pattern``/``pattern_tol`` (validate_symbolic contract).
 
     Solve: ``refine_iters``/``refine_tol`` (iterative refinement bounds).
+
+    Distribution: ``distribute=True`` makes ``analyze`` build a flat mesh
+    over every visible device (``launch.mesh.make_flat_mesh``) when no
+    explicit mesh is passed — the symbolic fixpoint shards its sources and
+    the plan's panel placement splits level work per device (DESIGN.md
+    §11); results are bitwise-identical at any device count.
     """
 
     # -- symbolic fixpoint
@@ -108,6 +126,8 @@ class LUOptions:
     # -- solve / refinement
     refine_iters: int = 2
     refine_tol: Optional[float] = None
+    # -- distribution (DESIGN.md §11)
+    distribute: bool = False
 
     def __post_init__(self):
         if self.backend not in _SYMBOLIC_BACKENDS:
@@ -161,17 +181,22 @@ class LUFactorization:
         return self.num.u
 
     def solve(self, b: np.ndarray, *, refine_iters: Optional[int] = None,
-              refine_tol: Optional[float] = None) -> SolveResult:
+              refine_tol: Optional[float] = None,
+              batched: Optional[bool] = None) -> SolveResult:
         """Solve A x = b on the existing factors.  ``b`` is (n,) or
         (n, k); refinement knobs default to the plan's ``LUOptions``.
-        ``SolveResult.factor_s`` is 0.0 — the factorization time lives on
-        this object's ``factor_s``."""
+        ``batched=None`` auto-picks the level-batched diagonal-solve path
+        for multi-RHS ``b`` (one vmapped call per level-width group); the
+        substitution sweeps keep the plan's per-device segments either
+        way.  ``SolveResult.factor_s`` is 0.0 — the factorization time
+        lives on this object's ``factor_s``."""
         opts = self.plan.options
         return _solve(
             self.plan.a, b, values=self.values, num=self.num,
             refine_iters=(opts.refine_iters if refine_iters is None
                           else refine_iters),
-            refine_tol=opts.refine_tol if refine_tol is None else refine_tol)
+            refine_tol=opts.refine_tol if refine_tol is None else refine_tol,
+            batched=batched)
 
     def refactorize(self, values: np.ndarray) -> "LUFactorization":
         """Factor a new value set **in place** on this factorization's
@@ -200,10 +225,18 @@ class LUPlan:
     csr_maps: CsrScatterMaps
     solve_schedule: SolveSchedule
     analyze_s: float
+    # device placement of panel work (DESIGN.md §11): plain numpy, so the
+    # plan pickles; the mesh itself is never stored — rebuild one with
+    # ``launch.mesh.make_flat_mesh`` where live devices are needed
+    placement: Optional[PanelPlacement] = None
 
     @property
     def n(self) -> int:
         return self.a.n
+
+    @property
+    def n_devices(self) -> int:
+        return self.placement.n_devices if self.placement is not None else 1
 
     @property
     def lu_nnz(self) -> int:
@@ -231,6 +264,7 @@ class LUPlan:
         store = (_reuse_store if _reuse_store is not None
                  else PanelStore.from_structure(self.store_template))
         store._solve_schedule = self.solve_schedule
+        store._placement = self.placement       # per-device solve segments
         num = factor_on_store(
             self.a, values, store, self.schedule,
             backend=self.options.numeric_backend,
@@ -238,7 +272,8 @@ class LUPlan:
             check_pattern=self.options.check_pattern,
             pattern_tol=self.options.pattern_tol,
             maps=self.gather_maps, csr_maps=self.csr_maps,
-            store_is_zeroed=_reuse_store is None)
+            store_is_zeroed=_reuse_store is None,
+            placement=self.placement)
         return LUFactorization(plan=self, num=num,
                                values=np.asarray(values, dtype=np.float64),
                                factor_s=time.perf_counter() - t0)
@@ -253,19 +288,34 @@ class LUPlan:
         return res
 
 
-def analyze(a: CSRMatrix, options: Optional[LUOptions] = None) -> LUPlan:
+def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
+            mesh=None) -> LUPlan:
     """Symbolic analysis of ``a``: one fixpoint pass streams out the L/U
     counts, the supernode partition (fingerprints), and the sparse
     ``CSCPattern``; everything value-independent downstream (schedules,
     row-index gather maps, CSR scatter maps, store structure, solve DAGs)
     is precomputed into the returned ``LUPlan``.
 
-    This never materializes a dense (n, n) pattern — host memory stays
-    O(nnz(L+U)) plus one (concurrency, n) chunk mask, so it scales to the
-    packed numeric path's n (tens of thousands and up).
+    ``mesh`` (a ``jax.sharding.Mesh``; ``launch.mesh.make_flat_mesh``
+    builds the flat one) shards the fixpoint's sources over the mesh
+    devices inside shard_map and attaches a ``PanelPlacement`` that splits
+    every level's panel work into per-device segments (DESIGN.md §11).
+    ``LUOptions(distribute=True)`` builds the all-device flat mesh
+    automatically.  The same code path runs at every device count —
+    counts, supernodes, pattern, factors, and solutions are
+    bitwise-identical to the mesh-less analysis, and the plan still
+    pickles (it stores the placement, never the mesh).
+
+    This never materializes a dense (n, n) pattern on the host *or on any
+    shard* — memory stays O(nnz(L+U)) plus the streamed chunk masks, so
+    it scales to the packed numeric path's n (tens of thousands and up).
     """
     t0 = time.perf_counter()
     opts = options if options is not None else LUOptions()
+    if mesh is None and opts.distribute:
+        from repro.launch.mesh import make_flat_mesh
+
+        mesh = make_flat_mesh()
     sym = _symbolic_factorize(
         a, concurrency=opts.concurrency, backend=opts.backend,
         combined=opts.combined, bubble=opts.bubble,
@@ -273,7 +323,7 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None) -> LUPlan:
         checkpoint_path=opts.checkpoint_path,
         detect_supernodes=True, supernode_relax=opts.supernode_relax,
         supernode_max_size=opts.supernode_max_size,
-        collect_pattern=True)
+        collect_pattern=True, mesh=mesh)
     pattern = sym.pattern
     schedule = build_schedule(pattern, sym.supernodes, n_bins=opts.n_bins,
                               policy=opts.policy)
@@ -281,43 +331,14 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None) -> LUPlan:
     gather_maps = build_gather_maps(store_template, schedule)
     csr_maps = store_template.csr_maps(a)
     solve_schedule = build_solve_schedule(store_template)
+    placement = None
+    if mesh is not None:
+        n_devices = int(np.prod(list(mesh.shape.values())))
+        placement = build_placement(schedule, n_devices,
+                                    axis=mesh.axis_names[0])
     return LUPlan(a=a, options=opts, sym=sym, pattern=pattern,
                   schedule=schedule, store_template=store_template,
                   gather_maps=gather_maps, csr_maps=csr_maps,
                   solve_schedule=solve_schedule,
-                  analyze_s=time.perf_counter() - t0)
-
-
-# ---------------------------------------------------------------------------
-# deprecated one-shot surface (one release of DeprecationWarning)
-# ---------------------------------------------------------------------------
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.{old} is deprecated and will be removed in the next "
-        f"release; use {new} (see repro.analyze / LUPlan / "
-        f"LUFactorization)", DeprecationWarning, stacklevel=3)
-
-
-def symbolic_factorize(a: CSRMatrix, **kwargs) -> SymbolicResult:
-    """Deprecated top-level shim — use ``repro.analyze`` (the plan carries
-    the ``SymbolicResult`` as ``plan.sym``).  Results are bitwise-identical
-    to the engine this shim forwards to."""
-    _deprecated("symbolic_factorize", "repro.analyze(a, options).sym")
-    return _symbolic_factorize(a, **kwargs)
-
-
-def numeric_factorize(a: CSRMatrix, sym=None, **kwargs) -> NumericResult:
-    """Deprecated top-level shim — use ``repro.analyze(a).factorize(values)``
-    which skips the per-call schedule/store/map reconstruction."""
-    _deprecated("numeric_factorize",
-                "repro.analyze(a, options).factorize(values).num")
-    return _numeric_factorize(a, sym, **kwargs)
-
-
-def solve(a: CSRMatrix, b: np.ndarray, **kwargs) -> SolveResult:
-    """Deprecated top-level shim — use
-    ``repro.analyze(a).factorize(values).solve(b)``."""
-    _deprecated("solve",
-                "repro.analyze(a, options).factorize(values).solve(b)")
-    return _solve(a, b, **kwargs)
+                  analyze_s=time.perf_counter() - t0,
+                  placement=placement)

@@ -15,11 +15,22 @@ per-source work is balanced; scaling is then purely a scheduling question:
 ``make_distributed_counts`` returns the jitted shard_map step used both for
 real execution (tests run it on 8 host devices) and for the 512-device
 production-mesh dry-run (launch/dryrun.py lowers it with ShapeDtypeStructs).
+
+``distributed_multisource`` is the *analyze* driver (DESIGN.md §11): the
+same per-shard fixpoint, but streaming each converged chunk's label matrix
+and fill mask back to the host so supernode fingerprints
+(supernodes/fingerprint.py) accumulate per shard — merged afterwards
+through ``runtime/collectives.merge_fingerprint_shards`` — and the sparse
+``CSCPattern`` streams through the ``PatternCollector`` hook.  No dense
+(n, n) pattern ever exists on any shard or on the host: each chunk step
+moves O(n_shards * concurrency * n) labels, reduced to O(nnz) state before
+the next step.  ``core.symbolic.symbolic_factorize(mesh=...)`` routes
+through this driver, which is how ``repro.analyze`` distributes.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -135,3 +146,164 @@ def distributed_symbolic(graph: SymbolicGraph, mesh: Mesh, *,
         "n_shards": n_shards,
         "policy": policy,
     }
+
+
+# ---------------------------------------------------------------------------
+# distributed analyze: the fixpoint chunk step that streams labels + masks
+# ---------------------------------------------------------------------------
+
+def ownership_mask(srcs_mat: np.ndarray) -> np.ndarray:
+    """(D, S) bool: True at the globally-first occurrence of each source.
+
+    ``assign_sources`` pads short rows by clipping ids to ``n - 1``, so the
+    last source can appear on several shards; exactly one shard must *own*
+    each source or per-shard fingerprint partials would double-count on
+    merge (``ColumnFingerprints.merge`` rejects overlapping shards for the
+    same reason).
+    """
+    flat = srcs_mat.reshape(-1)
+    owned = np.zeros(flat.shape, dtype=bool)
+    _, first = np.unique(flat, return_index=True)
+    owned[first] = True
+    return owned.reshape(srcs_mat.shape)
+
+
+def make_distributed_chunk_step(mesh: Mesh, graph_n: int, *,
+                                backend: str = "ell",
+                                max_iters: Optional[int] = None,
+                                axes: Optional[tuple] = None):
+    """Jitted shard_map step for ONE source chunk per device.
+
+    In: (D, C) source matrix sharded over ``axes``; replicated graph.
+    Out (all sharded on the leading axis): converged (D, C, n) label
+    matrices, (D, C, n) bool fill masks, (D, C) l/u counts and edge
+    checks, (D,) per-shard superstep counts.  The labels/masks leave the
+    step so the host can feed the streaming supernode-fingerprint and
+    pattern collectors — O(D * C * n) per step, never (n, n) anywhere.
+    """
+    if axes is None:
+        axes = tuple(mesh.axis_names)
+    if max_iters is None:
+        max_iters = graph_n + 2
+    spec_src = P(axes, None)
+    spec_mat = P(axes, None, None)
+    spec_rep = P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_src, spec_rep),
+        out_specs=(spec_mat, spec_mat, spec_src, spec_src, spec_src, P(axes)),
+        **SHARD_MAP_NOCHECK_KW,     # per-device while_loop trip counts differ
+    )
+    def body(srcs_mat, graph):
+        srcs = srcs_mat.reshape(-1)                       # (C,) local chunk
+        labels0 = init_labels(graph, srcs)
+        res = fixpoint_impl(graph, srcs, labels0, jnp.int32(0), backend,
+                            max_iters)
+        mask = fill_masks(res.labels, srcs)
+        l_cnt, u_cnt = row_counts(res.labels, srcs)
+        lead = srcs_mat.shape                             # (1, C) local
+        return (res.labels.reshape(lead + (graph.n,)),
+                mask.reshape(lead + (graph.n,)),
+                l_cnt.reshape(lead), u_cnt.reshape(lead),
+                res.edge_checks.reshape(lead),
+                jnp.broadcast_to(res.iters, (lead[0],)))
+
+    shardings = {spec_src: NamedSharding(mesh, spec_src),
+                 spec_mat: NamedSharding(mesh, spec_mat)}
+    return jax.jit(
+        body,
+        in_shardings=(shardings[spec_src], NamedSharding(mesh, spec_rep)),
+        out_shardings=(shardings[spec_mat], shardings[spec_mat],
+                       shardings[spec_src], shardings[spec_src],
+                       shardings[spec_src], NamedSharding(mesh, P(axes))))
+
+
+def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
+                            concurrency: int = 128, backend: str = "ell",
+                            policy: str = "interleave",
+                            axes: Optional[tuple] = None,
+                            on_shard_chunk: Optional[Callable] = None,
+                            on_shard_mask: Optional[Callable] = None):
+    """Multi-source symbolic fixpoint sharded over the mesh, streaming each
+    shard's converged chunks back to the host.
+
+    ``on_shard_chunk(d, labels, srcs)`` receives shard ``d``'s converged
+    (G, n) label matrix restricted to the rows that shard *owns* (see
+    ``ownership_mask``) — this is where per-shard ``ColumnFingerprints``
+    accumulate.  ``on_shard_mask(d, mask, srcs)`` receives the matching
+    bool fill masks (all rows — ``PatternCollector.update`` is idempotent)
+    for streaming the sparse CSC pattern.  Every per-source fixpoint is
+    *identical* to the single-device driver's (the fixpoint is unique and
+    chunking-independent), so counts, fingerprints, and patterns are
+    bitwise-equal to ``run_multisource`` at any device count.
+
+    Returns a ``core.multisource.MultiSourceResult`` plus a ``stats`` dict
+    (per-device edge checks, balance ratio) attached as ``result.dist``.
+    """
+    from repro.core.multisource import MultiSourceResult
+
+    if axes is None:
+        axes = tuple(mesh.axis_names)
+    n = graph.n
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    srcs_mat = assign_sources(n, n_shards, policy=policy)   # (D, per)
+    owned = ownership_mask(srcs_mat)
+    per = srcs_mat.shape[1]
+    concurrency = max(1, min(concurrency, per))
+    step = make_distributed_chunk_step(mesh, n, backend=backend, axes=axes)
+
+    l_counts = np.zeros(n, dtype=np.int64)
+    u_counts = np.zeros(n, dtype=np.int64)
+    edge_checks = np.zeros(n, dtype=np.int64)
+    conv_iters = np.zeros(n, dtype=np.int64)
+    per_dev_edges = np.zeros(n_shards, dtype=np.int64)
+    supersteps = 0
+    n_chunks = 0
+
+    for start in range(0, per, concurrency):
+        cols = srcs_mat[:, start:start + concurrency]
+        own = owned[:, start:start + concurrency]
+        if cols.shape[1] < concurrency:
+            # fixed step shape: pad by repeating each shard's last column
+            # (duplicate sources are idempotent and never owned twice)
+            short = concurrency - cols.shape[1]
+            cols = np.concatenate(
+                [cols, np.repeat(cols[:, -1:], short, axis=1)], axis=1)
+            own = np.concatenate(
+                [own, np.zeros((n_shards, short), dtype=bool)], axis=1)
+        labels, mask, l_cnt, u_cnt, edges, iters = step(
+            jnp.asarray(cols), graph)
+        labels = np.asarray(labels)
+        mask = np.asarray(mask)
+        l_cnt, u_cnt = np.asarray(l_cnt), np.asarray(u_cnt)
+        edges = np.asarray(edges)
+        for d in range(n_shards):
+            keep = own[d]
+            srcs_d = cols[d][keep]
+            l_counts[srcs_d] = l_cnt[d][keep]
+            u_counts[srcs_d] = u_cnt[d][keep]
+            edge_checks[srcs_d] = edges[d][keep]
+            per_dev_edges[d] += int(edges[d][keep].sum())
+            if on_shard_chunk is not None and keep.any():
+                on_shard_chunk(d, labels[d][keep], srcs_d)
+            if on_shard_mask is not None:
+                on_shard_mask(d, mask[d], cols[d])
+        # per-shard while_loop trip counts differ by design; the step's
+        # wall-clock is the slowest shard's count
+        supersteps += int(np.asarray(iters).max())
+        n_chunks += 1
+
+    result = MultiSourceResult(
+        l_counts=l_counts, u_counts=u_counts, edge_checks=edge_checks,
+        conv_iters=conv_iters, supersteps=supersteps, n_chunks=n_chunks,
+        concurrency=concurrency, reinits=n_chunks, windows=n_chunks)
+    balance = (float(per_dev_edges.max()) / max(1.0, float(per_dev_edges.min()))
+               if n_shards > 1 else 1.0)
+    result.dist = {                                 # type: ignore[attr-defined]
+        "n_shards": n_shards,
+        "per_device_edge_checks": per_dev_edges,
+        "balance_ratio": balance,
+        "policy": policy,
+    }
+    return result

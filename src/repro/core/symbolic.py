@@ -196,6 +196,90 @@ class PatternCollector:
                           rowind=rows[order])
 
 
+def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
+                                    mesh, *, concurrency: int, backend: str,
+                                    budget_bytes: Optional[int],
+                                    detect_supernodes: bool,
+                                    supernode_relax: int,
+                                    supernode_max_size: int,
+                                    collect_pattern: bool,
+                                    t0: float) -> SymbolicResult:
+    """Mesh-sharded symbolic pass (DESIGN.md §11): the multi-source fixpoint
+    runs inside ``core.distributed``'s shard_map chunk step; per-shard
+    supernode fingerprints accumulate from the streamed label matrices and
+    merge through ``runtime.collectives.merge_fingerprint_shards``; the
+    sparse CSC pattern streams through the same ``PatternCollector`` hook
+    as the single-device path.  Per-source fixpoints are unique and
+    chunking-independent, so every output (counts, supernodes, pattern) is
+    bitwise-identical to the single-device result at any device count —
+    the `tests/test_distributed_plan.py` conformance contract.
+    """
+    from repro.core.distributed import distributed_multisource
+    from repro.core.spaceopt import aux_memory_report
+    from repro.runtime.collectives import merge_fingerprint_shards
+
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[ax] for ax in axes]))
+
+    fp_shards = None
+    on_shard_chunk = None
+    if detect_supernodes:
+        from repro.supernodes import ColumnFingerprints
+
+        fp_shards = [ColumnFingerprints(n=a.n) for _ in range(n_shards)]
+
+        def on_shard_chunk(d, labels, srcs):
+            fp_shards[d].update(labels, srcs)
+
+    collector = PatternCollector(n=a.n) if collect_pattern else None
+    on_shard_mask = None
+    if collector is not None:
+        def on_shard_mask(d, mask, srcs):
+            collector.update(mask, srcs)
+
+    eff_c = auto_concurrency(graph, budget_bytes, concurrency, backend)
+    ms = distributed_multisource(
+        graph, mesh, concurrency=eff_c, backend=backend,
+        on_shard_chunk=on_shard_chunk, on_shard_mask=on_shard_mask)
+
+    sn_ranges = None
+    sn_count = 0
+    sn_mean = 0.0
+    if fp_shards is not None:
+        from repro.supernodes import detect_from_fingerprints, supernode_stats
+
+        if len(axes) == 1:
+            # device-side merge: one ring collective per accumulator
+            fp = merge_fingerprint_shards(mesh, axes[0], fp_shards)
+        else:
+            # multi-axis production meshes fold on the host (same result:
+            # the merge is associative/commutative either way)
+            fp = fp_shards[0]
+            for shard in fp_shards[1:]:
+                fp.merge(shard)
+        sn_ranges = detect_from_fingerprints(
+            fp, relax=supernode_relax, max_size=supernode_max_size)
+        stats = supernode_stats(sn_ranges)
+        sn_count = stats["n_supernodes"]
+        sn_mean = stats["mean_size"]
+
+    row_ids = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
+    nnz_offdiag = int(a.nnz) - int(np.count_nonzero(a.indices == row_ids))
+    fills = int(ms.l_counts.sum() + ms.u_counts.sum()) - nnz_offdiag
+    res = SymbolicResult(
+        n=a.n, l_counts=ms.l_counts, u_counts=ms.u_counts,
+        fill_ratio=fills / max(1, a.nnz),
+        concurrency=ms.concurrency, supersteps=ms.supersteps,
+        reinits=ms.reinits, elapsed_s=time.perf_counter() - t0,
+        memory_report=aux_memory_report(graph, ms.concurrency, backend),
+        supernodes=sn_ranges, n_supernodes=sn_count,
+        mean_supernode_size=sn_mean,
+        pattern=collector.to_csc() if collector is not None else None,
+    )
+    res.dist = getattr(ms, "dist", None)       # type: ignore[attr-defined]
+    return res
+
+
 def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
                        backend: str = "ell", combined: bool = True,
                        bubble: bool = False, use_arena: bool = True,
@@ -205,9 +289,9 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
                        detect_supernodes: bool = False,
                        supernode_relax: int = 0,
                        supernode_max_size: int = 64,
-                       collect_pattern: bool = False) -> SymbolicResult:
-    """Compute the L/U nonzero structure of ``a`` (single host; for multi-device
-    use core.distributed / runtime.scheduler).
+                       collect_pattern: bool = False,
+                       mesh=None) -> SymbolicResult:
+    """Compute the L/U nonzero structure of ``a``.
 
     With ``detect_supernodes=True`` the supernode partition rides along for
     free: per-chunk converged label matrices are folded into O(n) column
@@ -222,11 +306,37 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
     ``pattern``, a ``storage.CSCPattern`` in O(nnz(L+U)) host memory —
     what ``repro.analyze`` feeds the packed numeric path at any n, with no
     dense (n, n) gather anywhere (DESIGN.md §10).
+
+    With ``mesh`` (a ``jax.sharding.Mesh``; build one with
+    ``launch.mesh.make_flat_mesh``) the fixpoint shards its sources over
+    the mesh devices inside shard_map (DESIGN.md §11): fingerprints
+    accumulate per shard and merge through device collectives, the
+    pattern streams exactly as on one device, and every output is
+    bitwise-identical to the mesh-less path.  The distributed path always
+    runs combined chunks; ``bubble`` and ``checkpoint_path`` are
+    single-device refinements and raise here, while ``use_arena`` is
+    simply ignored (no label-arena windows inside shard_map).
     """
     t0 = time.perf_counter()
     if graph is None:
         dense_block = 128 if backend in ("dense", "kernel") else None
         graph = prepare_graph(a, dense_block=dense_block)
+    if mesh is not None:
+        if checkpoint_path is not None:
+            raise ValueError(
+                "checkpoint_path is a single-device refinement; the "
+                "distributed path re-runs lost shards instead (drop the "
+                "mesh or the checkpoint)")
+        if bubble:
+            raise ValueError("bubble removal is not supported on the "
+                             "distributed path (chunks are full-width)")
+        return _symbolic_factorize_distributed(
+            a, graph, mesh, concurrency=concurrency, backend=backend,
+            budget_bytes=budget_bytes,
+            detect_supernodes=detect_supernodes,
+            supernode_relax=supernode_relax,
+            supernode_max_size=supernode_max_size,
+            collect_pattern=collect_pattern, t0=t0)
     eff_c = auto_concurrency(graph, budget_bytes, concurrency, backend)
 
     fp = None

@@ -54,3 +54,32 @@ def make_host_mesh(model: int = 1) -> Mesh:
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return compat_make_mesh((n // model, model), ("data", "model"))
+
+
+FLAT_AXIS = "shards"
+
+
+def make_flat_mesh(n_devices: int | None = None) -> Mesh:
+    """One-axis ``(shards,)`` mesh — the distributed analyze/factorize
+    substrate (DESIGN.md §11): GSoFa shards *sources* (and the plan shards
+    *panels*) over the flattened device space, so a single axis is the
+    whole story at any scale.
+
+    ``n_devices=None`` takes every visible device through the compat
+    builder — the same call yields a 1-device mesh on a laptop and an
+    8-device mesh under ``XLA_FLAGS=--xla_force_host_platform_device_count
+    =8``, which is exactly how the conformance tier runs one code path at
+    every device count.  An explicit ``n_devices`` takes a prefix of
+    ``jax.devices()`` (must not exceed what exists).
+    """
+    avail = jax.devices()
+    if n_devices is None:
+        return compat_make_mesh((len(avail),), (FLAT_AXIS,))
+    if not 1 <= n_devices <= len(avail):
+        raise ValueError(f"n_devices={n_devices} out of range for "
+                         f"{len(avail)} visible device(s)")
+    if n_devices == len(avail):
+        return compat_make_mesh((n_devices,), (FLAT_AXIS,))
+    import numpy as np
+
+    return Mesh(np.asarray(avail[:n_devices]), (FLAT_AXIS,))

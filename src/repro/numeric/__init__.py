@@ -10,16 +10,21 @@ dense GEMM updates on the packed blocks (Pallas MXU kernel
 ``kernels/panel_update.py`` on TPU, float64 BLAS by default) -> solve.py runs
 supernodal triangular substitution + iterative refinement on the factors.
 
-    from repro import solve, symbolic_factorize
+    from repro.core.symbolic import symbolic_factorize
+    from repro.numeric import solve
     sym = symbolic_factorize(a, detect_supernodes=True)
     res = solve(a, b, sym=sym)               # ||A res.x - b|| / ||b|| <= 1e-10
+
+(The supported public surface is the plan/factor session API,
+``repro.analyze`` — this layer is the engine room.)
 
 ``sparse/numeric.py::lu_nopivot`` remains the dense test oracle;
 ``factorize_columns`` is the column-at-a-time baseline the benchmark
 (``benchmarks/bench_numeric.py``) compares against.
 """
 from repro.numeric.schedule import (
-    PanelMaps, PanelSchedule, build_gather_maps, build_schedule,
+    PanelMaps, PanelPlacement, PanelSchedule, build_gather_maps,
+    build_placement, build_schedule,
 )
 from repro.numeric.solve import (
     SolveResult, SolveSchedule, backward_substitute, build_solve_schedule,
@@ -34,7 +39,8 @@ from repro.numeric.supernodal import (
 from repro.sparse.numeric import ZeroPivotError
 
 __all__ = [
-    "PanelMaps", "PanelSchedule", "build_gather_maps", "build_schedule",
+    "PanelMaps", "PanelPlacement", "PanelSchedule", "build_gather_maps",
+    "build_placement", "build_schedule",
     "CSCPattern", "CsrScatterMaps", "PanelStore", "uniform_supernodes",
     "NumericResult", "factor_on_store", "factorize_columns",
     "numeric_factorize",

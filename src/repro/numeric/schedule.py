@@ -67,6 +67,70 @@ class PanelSchedule:
         }
 
 
+@dataclasses.dataclass(frozen=True)
+class PanelPlacement:
+    """Device assignment of panels for multi-device factorize/solve
+    (DESIGN.md §11).
+
+    Derived from ``pack_panels`` bins computed *per dependency level*:
+    each level's panels — which are exactly the independent work of one
+    sweep step — are LPT-packed by predicted L-panel nnz into
+    ``n_devices`` bins, so every level's critical path is within one
+    panel weight of optimal.  Within a level panels are independent
+    (left-looking panels only read strictly-earlier levels), so *any*
+    segment execution order yields bitwise-identical factors — placement
+    changes scheduling/dispatch, never math; that is what makes factors
+    invariant to the device count (the conformance-tier contract).
+
+    Plain numpy only — plans stay picklable; the mesh itself is never
+    stored (rebuild one with ``launch.mesh.make_flat_mesh`` where needed).
+    """
+
+    n_devices: int
+    axis: str                      # mesh axis name (launch.mesh.FLAT_AXIS)
+    device_of_panel: np.ndarray    # (k,) int64 device id per panel
+
+    def segments(self, members: np.ndarray) -> List[np.ndarray]:
+        """Per-device panel lists of one level (ascending ids within each
+        segment; devices without work get empty segments)."""
+        members = np.asarray(members, dtype=np.int64)
+        dev = self.device_of_panel[members]
+        return [np.sort(members[dev == d]) for d in range(self.n_devices)]
+
+    def level_loads(self, schedule: "PanelSchedule") -> np.ndarray:
+        """(n_levels, n_devices) packed panel weight per device per level —
+        the placement-quality surface bench_distributed reports."""
+        from repro.supernodes.balance import supernode_weights
+
+        weights = supernode_weights(schedule.supernodes, schedule.col_counts)
+        out = np.zeros((schedule.n_levels, self.n_devices), dtype=np.int64)
+        for lv, members in enumerate(schedule.levels):
+            np.add.at(out[lv], self.device_of_panel[members],
+                      weights[members])
+        return out
+
+
+def build_placement(schedule: PanelSchedule, n_devices: int, *,
+                    axis: str = "shards",
+                    policy: str = "lpt") -> PanelPlacement:
+    """Panel -> device assignment from per-level ``pack_panels`` bins (see
+    ``PanelPlacement``).  ``n_devices=1`` degenerates to everything on
+    device 0 — the same code path the conformance tier runs at every
+    count."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    device_of_panel = np.zeros(schedule.n_panels, dtype=np.int64)
+    for members in schedule.levels:
+        if not len(members):
+            continue
+        part = pack_panels(schedule.supernodes[members],
+                           schedule.col_counts,
+                           min(n_devices, len(members)), policy=policy)
+        device_of_panel[members] = part.assignment
+    return PanelPlacement(n_devices=n_devices, axis=axis,
+                          device_of_panel=device_of_panel)
+
+
 @dataclasses.dataclass
 class PanelMaps:
     """Value-independent row-index maps of one panel's ancestor updates.

@@ -97,52 +97,151 @@ def _solve_schedule_of(store: PanelStore) -> SolveSchedule:
     return sched
 
 
-def forward_substitute(store: PanelStore, b: np.ndarray) -> np.ndarray:
-    """y with L y = b (unit-lower L in the packed blocks)."""
+def _placement_of(store: PanelStore):
+    return getattr(store, "_placement", None)
+
+
+def _level_iter(store: PanelStore, level: np.ndarray):
+    """Per-device segments of one level (the parallel dispatch unit,
+    DESIGN.md §11) — a single all-panels segment without a placement.
+    Diagonal solves within a level are independent and write disjoint
+    ranges, so segment grouping never changes a float op."""
+    placement = _placement_of(store)
+    if placement is None or placement.n_devices <= 1:
+        return (level,)
+    return tuple(seg for seg in placement.segments(level) if len(seg))
+
+
+def _batched_solve_unit_lower(mats: np.ndarray, rhs: np.ndarray) -> np.ndarray:
+    """Forward substitution vmapped over stacked panels: ``mats`` (p, w, w)
+    L\\U-packed unit-lower blocks against ``rhs`` (p, w, k), in place.
+    One batched row-sweep per level-width group replaces p * k scalar
+    triangular solves — numpy broadcasting is the vmap."""
+    w = mats.shape[1]
+    for i in range(1, w):
+        rhs[:, i, :] -= np.einsum("pj,pjk->pk", mats[:, i, :i], rhs[:, :i, :])
+    return rhs
+
+
+def _batched_solve_upper(mats: np.ndarray, rhs: np.ndarray) -> np.ndarray:
+    """Backward substitution vmapped over stacked panels (non-unit upper)."""
+    w = mats.shape[1]
+    for i in range(w - 1, -1, -1):
+        if i + 1 < w:
+            rhs[:, i, :] -= np.einsum("pj,pjk->pk", mats[:, i, i + 1:],
+                                      rhs[:, i + 1:, :])
+        rhs[:, i, :] /= mats[:, i, i][:, None]
+    return rhs
+
+
+def _diag_block(store: PanelStore, j: int) -> np.ndarray:
+    s, e = store.supernodes[j]
+    d = int(store.diag[j])
+    return store.blocks[j][d:d + e - s]
+
+
+def _level_diag_solves(store: PanelStore, level: np.ndarray, y: np.ndarray,
+                       *, lower: bool, batched: bool) -> None:
+    """Phase 1 of one substitution level: every panel's diagonal solve.
+
+    ``batched=True`` groups the level's panels by width and runs ONE
+    vmapped solve per group (multi-RHS ``y`` solves all columns in the
+    same call); otherwise panels are walked per device segment with scipy
+    BLAS.  Either way the solves are independent and touch disjoint
+    ``y[s:e]`` ranges, so results do not depend on grouping or device
+    count — only on which algorithm (batched sweep vs LAPACK trsm) ran.
+    """
+    widths = (store.supernodes[level, 1] - store.supernodes[level, 0])
+    if batched:
+        multi = y.ndim == 2
+        for w in np.unique(widths):
+            ids = level[widths == w]
+            if not lower:          # scalar division handles w == 1 upper
+                if w == 1:
+                    diag = np.array([_diag_block(store, int(j))[0, 0]
+                                     for j in ids])
+                    starts = store.supernodes[ids, 0]
+                    y[starts] = (y[starts].T / diag).T
+                    continue
+            if w == 1:
+                continue           # unit lower: nothing to solve
+            mats = np.stack([_diag_block(store, int(j)) for j in ids])
+            rhs = np.stack([y[s:e] for s, e in store.supernodes[ids]])
+            if not multi:
+                rhs = rhs[:, :, None]
+            rhs = (_batched_solve_unit_lower(mats, rhs) if lower
+                   else _batched_solve_upper(mats, rhs))
+            for i, (s, e) in enumerate(store.supernodes[ids]):
+                y[s:e] = rhs[i] if multi else rhs[i, :, 0]
+        return
+    for seg in _level_iter(store, level):
+        for j in seg:
+            s, e = store.supernodes[j]
+            w = e - s
+            diag = _diag_block(store, int(j))
+            if lower:
+                if w > 1:
+                    y[s:e] = solve_triangular(diag, y[s:e], lower=True,
+                                              unit_diagonal=True,
+                                              check_finite=False)
+            else:
+                if w == 1:
+                    y[s] = y[s] / diag[0, 0]
+                else:
+                    y[s:e] = solve_triangular(diag, y[s:e], lower=False,
+                                              check_finite=False)
+
+
+def forward_substitute(store: PanelStore, b: np.ndarray, *,
+                       batched: Optional[bool] = None) -> np.ndarray:
+    """y with L y = b (unit-lower L in the packed blocks).
+
+    Each level runs in two phases: the independent diagonal solves
+    (grouped per device segment, or batched into one vmapped call per
+    level-width group — ``batched=None`` auto-enables batching for
+    multi-RHS ``b``), then the scatter pushes applied in ascending panel
+    order.  Pushes from same-level panels may overlap on later rows, so
+    the ascending application order is the deterministic combine that
+    keeps results bitwise-identical at every device count.
+    """
     y = np.asarray(b, dtype=np.float64).copy()
+    if batched is None:
+        batched = y.ndim == 2
     for level in _solve_schedule_of(store).fwd_levels:
-        for j in level:
+        _level_diag_solves(store, level, y, lower=True, batched=batched)
+        for j in level:                       # ascending: fwd_levels sorted
             s, e = store.supernodes[j]
             d = int(store.diag[j])
-            w = e - s
-            diag = store.blocks[j][d:d + w]
-            if w == 1:
-                yj = y[s:e]
-            else:
-                yj = solve_triangular(diag, y[s:e], lower=True,
-                                      unit_diagonal=True, check_finite=False)
-                y[s:e] = yj
-            below = store.rows[j][d + w:]
+            below = store.rows[j][d + (e - s):]
             if len(below):
-                y[below] -= store.blocks[j][d + w:] @ yj
+                y[below] -= store.blocks[j][d + (e - s):] @ y[s:e]
     return y
 
 
-def backward_substitute(store: PanelStore, y: np.ndarray) -> np.ndarray:
-    """x with U x = y (upper U in the packed blocks)."""
+def backward_substitute(store: PanelStore, y: np.ndarray, *,
+                        batched: Optional[bool] = None) -> np.ndarray:
+    """x with U x = y (upper U in the packed blocks); same two-phase level
+    structure as ``forward_substitute``."""
     x = np.asarray(y, dtype=np.float64).copy()
+    if batched is None:
+        batched = x.ndim == 2
     for level in _solve_schedule_of(store).bwd_levels:
+        _level_diag_solves(store, level, x, lower=False, batched=batched)
         for j in level:
             s, e = store.supernodes[j]
-            d = int(store.diag[j])
-            w = e - s
-            diag = store.blocks[j][d:d + w]
-            if w == 1:
-                x[s] = x[s] / diag[0, 0]
-                xj = x[s:e]
-            else:
-                xj = solve_triangular(diag, x[s:e], lower=False,
-                                      check_finite=False)
-                x[s:e] = xj
-            above = store.rows[j][:d]
+            above = store.rows[j][:store.diag[j]]
             if len(above):
-                x[above] -= store.blocks[j][:d] @ xj
+                x[above] -= store.blocks[j][:store.diag[j]] @ x[s:e]
     return x
 
 
-def solve_factored(num: NumericResult, b: np.ndarray) -> np.ndarray:
+def solve_factored(num: NumericResult, b: np.ndarray, *,
+                   batched: Optional[bool] = None) -> np.ndarray:
     """x = U^{-1} L^{-1} b on the packed factors (no refinement)."""
-    return backward_substitute(num.store, forward_substitute(num.store, b))
+    return backward_substitute(num.store,
+                               forward_substitute(num.store, b,
+                                                  batched=batched),
+                               batched=batched)
 
 
 @dataclasses.dataclass
@@ -188,7 +287,8 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
           num: Optional[NumericResult] = None,
           refine_iters: int = 2, refine_tol: Optional[float] = None,
           n_bins: int = 8, policy: str = "lpt",
-          backend: str = "numpy") -> SolveResult:
+          backend: str = "numpy",
+          batched: Optional[bool] = None) -> SolveResult:
     """Solve A x = b through the symbolic -> packed-numeric -> substitution
     pipeline, with iterative refinement.
 
@@ -196,6 +296,9 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     the substitution sweeps and the refinement matvec are batched over the
     columns, so k systems cost one factorization plus k-column triangular
     solves (the circuit-simulation refactorization regime, DESIGN.md §10).
+    ``batched`` picks the level-batched (vmapped) diagonal-solve path —
+    ``None`` auto-enables it for multi-RHS ``b``; see
+    ``forward_substitute``.
 
     ``a``/``sym``/``values``/``pattern``/``supernodes`` are forwarded to
     ``numeric_factorize`` (``values`` dense (n, n) or CSR-aligned (nnz,);
@@ -246,7 +349,7 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     b_norms = (np.array([np.linalg.norm(b)]) if b.ndim == 1
                else np.linalg.norm(b, axis=0))
     b_norms = np.where(b_norms == 0.0, 1.0, b_norms)
-    x = solve_factored(num, b)
+    x = solve_factored(num, b, batched=batched)
     res_cols = _col_residuals(matvec, x, b, b_norms)
     residuals = [float(res_cols.max())]
     accepted = 0
@@ -254,7 +357,7 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
         if res_cols.max() <= refine_tol:
             break
         r = b - matvec(x)
-        x_try = x + solve_factored(num, r)
+        x_try = x + solve_factored(num, r, batched=batched)
         res_try = _col_residuals(matvec, x_try, b, b_norms)
         improve = res_try < res_cols
         if not improve.any():

@@ -44,6 +44,7 @@ column-at-a-time sparse baseline the benchmark compares against.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Optional, Tuple
@@ -212,13 +213,23 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
                     check_pattern: bool = True,
                     pattern_tol: Optional[float] = None,
                     maps=None, csr_maps=None,
-                    store_is_zeroed: bool = False) -> NumericResult:
+                    store_is_zeroed: bool = False,
+                    placement=None) -> NumericResult:
     """Scatter ``values`` into ``store`` and run the level-scheduled panel
     sweep — the value-dependent core shared by one-shot
     ``numeric_factorize`` and plan-based ``LUPlan.factorize`` (which passes
     precomputed ``maps``/``csr_maps`` so nothing value-independent is
     rebuilt).  Both paths execute identical float operations, so the
-    factors are bitwise-identical by construction."""
+    factors are bitwise-identical by construction.
+
+    ``placement`` (a ``schedule.PanelPlacement``) splits every level into
+    per-device panel segments (DESIGN.md §11): segments are the dispatch
+    unit — on the "kernel" backend each segment's accumulated GEMMs are
+    issued under its device's ``jax.default_device`` so XLA overlaps the
+    per-device streams; on the "numpy" backend segments order the sweep.
+    Panels within a level only ever read strictly-earlier levels and write
+    their own block, so segment grouping cannot change a single float op:
+    factors stay bitwise-identical at every device count."""
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
     n = store.n
@@ -251,17 +262,38 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     if piv_tol is None:
         piv_tol = pivot_tolerance(scale)
 
+    # per-device dispatch contexts: only the jax kernel backend has device
+    # placement to exploit; numpy BLAS segments are a pure scheduling order
+    devices = None
+    if (placement is not None and placement.n_devices > 1
+            and backend == "kernel"):
+        import jax
+
+        if len(jax.devices()) >= placement.n_devices:
+            devices = jax.devices()[:placement.n_devices]
+
     n_updates = 0
     gemm_flops = 0
     dropped_max = input_outside
     for level in schedule.levels:
-        for j in level:
-            upd, flops, dropped = _factor_panel(
-                store, schedule, int(j), piv_tol, backend,
-                maps=maps[j] if maps is not None else None)
-            n_updates += upd
-            gemm_flops += flops
-            dropped_max = max(dropped_max, dropped)
+        if placement is None or placement.n_devices <= 1:
+            segments = ((None, level),)
+        else:
+            segments = tuple(
+                (d, seg) for d, seg in enumerate(placement.segments(level))
+                if len(seg))
+        for d, seg in segments:
+            ctx = (jax.default_device(devices[d])
+                   if devices is not None and d is not None
+                   else contextlib.nullcontext())
+            with ctx:
+                for j in seg:
+                    upd, flops, dropped = _factor_panel(
+                        store, schedule, int(j), piv_tol, backend,
+                        maps=maps[j] if maps is not None else None)
+                    n_updates += upd
+                    gemm_flops += flops
+                    dropped_max = max(dropped_max, dropped)
 
     outside_max = max(store.padding_max(), dropped_max)
     if check_pattern and outside_max > pattern_tol * scale:

@@ -242,49 +242,32 @@ def test_options_thread_through_plan(plans):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# deprecated one-shot surface: removed in 1.4.0 (announced for one release)
 # ---------------------------------------------------------------------------
 
-def test_symbolic_shim_warns_once_and_matches():
-    a = _matrix("circuit")
-    with pytest.warns(DeprecationWarning, match="symbolic_factorize") as rec:
-        got = repro.symbolic_factorize(a, concurrency=64,
-                                       detect_supernodes=True)
-    assert len(rec) == 1
-    ref = symbolic_factorize(a, concurrency=64, detect_supernodes=True)
-    assert np.array_equal(got.l_counts, ref.l_counts)
-    assert np.array_equal(got.u_counts, ref.u_counts)
-    assert np.array_equal(got.supernodes, ref.supernodes)
+@pytest.mark.parametrize("name", ["symbolic_factorize", "numeric_factorize",
+                                  "solve"])
+def test_deprecated_names_are_gone_from_top_level(name):
+    """The 1.3.x DeprecationWarning shims were removed on schedule: the
+    names are absent from the lazy export table and raise AttributeError —
+    the engine-level homes (repro.core.symbolic / repro.numeric) remain."""
+    assert name not in repro._LAZY_EXPORTS
+    assert name not in repro.__all__
+    with pytest.raises(AttributeError, match=name):
+        getattr(repro, name)
 
 
-def test_numeric_shim_warns_once_and_matches():
-    a = _matrix("grid2d")
-    values = generic_values_csr(a)
-    sym = symbolic_factorize(a, concurrency=64, detect_supernodes=True)
-    with pytest.warns(DeprecationWarning, match="numeric_factorize") as rec:
-        got = repro.numeric_factorize(a, sym, values=values)
-    assert len(rec) == 1
-    ref = numeric_factorize(a, sym, values=values)
-    lg, ug = got.store.dense_lu()
-    lr, ur = ref.store.dense_lu()
-    assert np.array_equal(lg, lr) and np.array_equal(ug, ur)
+def test_engine_level_names_still_importable():
+    from repro.core.symbolic import symbolic_factorize as sf
+    from repro.numeric import numeric_factorize as nf, solve as sv
 
-
-def test_solve_shim_warns_once_and_matches():
-    a = _matrix("banded")
-    values = generic_values_csr(a)
-    b = np.random.default_rng(6).standard_normal(a.n)
-    with pytest.warns(DeprecationWarning, match=r"repro\.solve") as rec:
-        got = repro.solve(a, b, values=values)
-    assert len(rec) == 1
-    ref = solve(a, b, values=values)
-    assert np.array_equal(got.x, ref.x)
+    assert callable(sf) and callable(nf) and callable(sv)
 
 
 def test_internal_modules_never_call_deprecated_surface(plans):
-    """With the repo-wide ``error::DeprecationWarning:repro`` filter, any
-    repro-internal call of the shims would have exploded above; assert the
-    filter is actually installed so the guarantee holds in CI."""
+    """The repo-wide ``error::DeprecationWarning:repro`` filter stays: any
+    future deprecation cycle gets the same cannot-call-internally
+    guarantee; assert the filter is actually installed."""
     filters = [f for f in warnings.filters
                if f[2] is DeprecationWarning]
     assert any(f[3] and f[3].pattern == "repro" and f[0] == "error"
@@ -339,8 +322,9 @@ def test_pattern_collector_idempotent_redelivery():
 
 
 def test_version_and_exports():
-    assert repro.__version__ == "1.3.0"
-    for name in ("analyze", "LUOptions", "LUPlan", "LUFactorization"):
+    assert repro.__version__ == "1.4.0"
+    for name in ("analyze", "LUOptions", "LUPlan", "LUFactorization",
+                 "PanelPlacement"):
         assert name in repro.__all__
         assert getattr(repro, name) is not None
     assert repro.analyze is analyze

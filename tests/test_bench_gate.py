@@ -137,5 +137,56 @@ def test_committed_baselines_exist_and_gate_runs():
     base = os.path.join(repo, "benchmarks", "baselines")
     names = [f for f in os.listdir(base) if f.endswith(".json")]
     assert {"bench_numeric.json", "bench_supernode.json",
-            "bench_solve.json", "bench_refactorize.json"} <= set(names)
+            "bench_solve.json", "bench_refactorize.json",
+            "bench_distributed.json"} <= set(names)
     assert check_baselines(artifacts_dir=base, baseline_dir=base) == []
+
+
+# ---------------------------------------------------------------------------
+# the bench_distributed gate (ISSUE 5): placement speedups are ratio-gated,
+# structural/parity fields ride along ungated
+# ---------------------------------------------------------------------------
+
+DIST = {"bbd": {"placement2_speedup": 1.9, "placement8_speedup": 6.5,
+                "devices_used_d8": 8, "max_level_width": 1282},
+        "multidevice-8": {"parity": 1, "balance_ratio": 1.1,
+                          "t_analyze_dist_s": 1.3}}
+
+
+def test_gate_fails_on_placement_speedup_regression(dirs):
+    """A placement change that lengthens the modeled level critical path
+    (e.g. reverting per-level LPT to global-bin modulo) collapses
+    placement*_speedup — gated as a ratio metric."""
+    art, base = dirs
+    _write(base, "bench_distributed", DIST)
+    fresh = {**DIST, "bbd": dict(DIST["bbd"], placement8_speedup=1.4)}
+    _write(art, "bench_distributed", fresh)
+    v = check_baselines(artifacts_dir=art, baseline_dir=base)
+    assert [x["kind"] for x in v] == ["ratio-regression"]
+    assert "placement8_speedup" in v[0]["path"]
+
+
+def test_gate_ignores_parity_and_coverage_fields(dirs):
+    """parity / devices_used / balance_ratio are enforced *inside*
+    bench_distributed (hard failures), not by the drift gate — shifting
+    them here alone must not trip ratio or time checks."""
+    art, base = dirs
+    _write(base, "bench_distributed", DIST)
+    fresh = {"bbd": dict(DIST["bbd"], devices_used_d8=4),
+             "multidevice-8": dict(DIST["multidevice-8"], parity=0,
+                                   balance_ratio=9.9)}
+    _write(art, "bench_distributed", fresh)
+    assert check_baselines(artifacts_dir=art, baseline_dir=base) == []
+
+
+def test_gate_times_in_distributed_artifact_opt_in(dirs):
+    art, base = dirs
+    _write(base, "bench_distributed", DIST)
+    fresh = {**DIST, "multidevice-8": dict(DIST["multidevice-8"],
+                                           t_analyze_dist_s=99.0)}
+    _write(art, "bench_distributed", fresh)
+    assert check_baselines(artifacts_dir=art, baseline_dir=base) == []
+    v = check_baselines(artifacts_dir=art, baseline_dir=base,
+                        include_times=True)
+    assert [x["kind"] for x in v] == ["time-regression"]
+    assert "t_analyze_dist_s" in v[0]["path"]
