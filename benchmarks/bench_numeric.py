@@ -26,9 +26,35 @@ MATRICES = {
 }
 
 
+def _gemm_roofline(name, plan, values) -> dict:
+    """Panel-GEMM sweep throughput against both roofs (DESIGN.md §12):
+    bandwidth via the sweep's analytic gather/scatter traffic model
+    (``gemm.bytes``), compute via the counted flops — the arithmetic
+    intensity in the report says which roof binds.  Counter deltas, so an
+    outer ``--trace`` run's accumulation does not pollute the report."""
+    from benchmarks.roofline import machine_peaks
+    from repro import obs
+
+    reg = obs.registry()
+    with obs.ensure(True):
+        f0 = float(reg.get("gemm.flops") or 0.0)
+        b0 = float(reg.get("gemm.bytes") or 0.0)
+        s0 = float(reg.get("gemm.seconds") or 0.0)
+        plan.factorize(values)
+        flops = float(reg.get("gemm.flops") or 0.0) - f0
+        nbytes = float(reg.get("gemm.bytes") or 0.0) - b0
+        seconds = float(reg.get("gemm.seconds") or 0.0) - s0
+    rep = obs.roofline_report("panel_gemm_sweep", nbytes=nbytes,
+                              seconds=seconds, peaks=machine_peaks(),
+                              flops=flops)
+    rep["matrix"] = name
+    return rep
+
+
 def run(relax: int = 2, n_bins: int = 8, repeats: int = 3) -> dict:
     results = {}
     rows = []
+    roof_case = None
     for name, gen in MATRICES.items():
         a = gen()
         a = permute_csr(a, rcm_order(a))
@@ -61,12 +87,21 @@ def run(relax: int = 2, n_bins: int = 8, repeats: int = 3) -> dict:
         rows.append([name, a.n, num.n_supernodes, num.n_levels,
                      f"{t_col*1e3:.0f}ms", f"{t_sup*1e3:.0f}ms",
                      f"{speedup:.2f}x", f"{rel:.1e}"])
+        roof_case = (name, plan, values)       # last = most GEMM-heavy
     print_table("Supernodal numeric LU — batched panel GEMMs vs "
                 "column-at-a-time",
                 ["matrix", "|V|", "#sn", "levels", "column", "supernodal",
                  "speedup", "rel err"], rows)
+    rep = _gemm_roofline(*roof_case)
+    results["roofline_gemm"] = rep
+    print(f"\npanel-GEMM roofline ({rep['matrix']}): "
+          f"{rep['achieved_gflops']:.2f} GFLOP/s = "
+          f"{rep['flop_fraction']:.1%} of peak; "
+          f"{rep['achieved_gbs']:.2f} GB/s = "
+          f"{rep['bw_fraction']:.1%} of peak "
+          f"(intensity {rep['intensity_flops_per_byte']:.1f} flop/byte)")
     save_artifact("bench_numeric", results)
-    worst = min(r["speedup"] for r in results.values())
+    worst = min(r["speedup"] for r in results.values() if "speedup" in r)
     if worst < 1.5:
         raise RuntimeError(
             f"supernodal-batched speedup dropped below 1.5x ({worst:.2f}x)")

@@ -26,7 +26,7 @@ import tracemalloc
 
 import numpy as np
 
-from benchmarks.common import print_table, save_artifact, timeit
+from benchmarks.common import print_table, progress_cb, save_artifact, timeit
 from repro.api import LUOptions, analyze
 from repro.core.symbolic import symbolic_factorize
 from repro.numeric import numeric_factorize
@@ -94,7 +94,8 @@ def _large_case(repeats):
     a = bordered_block_diagonal(LARGE_N, block=LARGE_BLOCK,
                                 border=LARGE_BORDER, seed=3)
     tracemalloc.start()
-    plan = analyze(a, LUOptions(concurrency=512))
+    plan = analyze(a, LUOptions(concurrency=512),
+                   on_progress=progress_cb(f"analyze bbd-{LARGE_N}"))
     _, peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
     dense_pattern_bytes = LARGE_N * LARGE_N           # (n, n) bool

@@ -21,12 +21,38 @@ from repro.supernodes import (
 )
 
 
+def _fingerprint_roofline(graph, concurrency: int, relax: int,
+                          max_size: int) -> dict:
+    """Achieved memory bandwidth of the fingerprint-update kernel as a
+    fraction of this host's probed STREAM peak (DESIGN.md §12) — the
+    repo's analogue of GSoFa's 47%-of-V100-peak figure.  Counters come
+    from the obs-instrumented ``Fingerprints.update`` (bytes from the
+    traffic model, seconds measured), deltas taken so an outer ``--trace``
+    run's accumulation does not pollute the report."""
+    from benchmarks.roofline import machine_peaks
+    from repro import obs
+
+    reg = obs.registry()
+    with obs.ensure(True):
+        b0 = float(reg.get("fingerprint.bytes") or 0.0)
+        s0 = float(reg.get("fingerprint.seconds") or 0.0)
+        fp = fingerprints_from_graph(graph, concurrency=concurrency)
+        detect_from_fingerprints(fp, relax=relax, max_size=max_size)
+        nbytes = float(reg.get("fingerprint.bytes") or 0.0) - b0
+        seconds = float(reg.get("fingerprint.seconds") or 0.0) - s0
+    return obs.roofline_report("fingerprint_update", nbytes=nbytes,
+                               seconds=seconds, peaks=machine_peaks())
+
+
 def run(codes=("BC", "EP", "G7", "LH", "TT", "PR"), concurrency: int = 256,
         relax: int = 0, max_size: int = 64, n_panels: int = 8) -> dict:
     results = {}
     rows = []
+    roof_code, roof_graph, roof_n = None, None, -1
     for code, a in load_datasets(codes).items():
         graph = prepare_graph(a)
+        if a.n > roof_n:                       # roofline on the largest case
+            roof_code, roof_graph, roof_n = code, graph, a.n
 
         def batched():
             fp = fingerprints_from_graph(graph, concurrency=concurrency)
@@ -65,6 +91,13 @@ def run(codes=("BC", "EP", "G7", "LH", "TT", "PR"), concurrency: int = 256,
                 "fingerprints",
                 ["dataset", "|V|", "serial", "batched", "#sn", "mean size",
                  f"LPT balance (p={n_panels})"], rows)
+    roof = _fingerprint_roofline(roof_graph, concurrency, relax, max_size)
+    roof["dataset"] = roof_code
+    results["roofline_fingerprint"] = roof
+    print(f"\nfingerprint roofline ({roof_code}): "
+          f"{roof['achieved_gbs']:.2f} GB/s achieved = "
+          f"{roof['bw_fraction']:.1%} of probed peak "
+          f"{roof['peak_gbs']:.2f} GB/s")
     save_artifact("bench_supernode", results)
     return results
 

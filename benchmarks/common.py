@@ -13,6 +13,28 @@ import numpy as np
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
 
+# artifact schema: v1 = raw result dicts + "_meta"; v2 adds "_schema" and an
+# obs "metrics" block (span phase totals + registry snapshot).  The baseline
+# gate walks only the keys a committed baseline names and skips "_"-prefixed
+# sections and "metrics", so v2 artifacts check cleanly against v1 baselines.
+SCHEMA_VERSION = 2
+
+# flipped by ``run.py --trace``: long-running suites pass
+# ``progress_cb(label)`` to analyze()/run_multisource() and get rate-limited
+# stderr progress lines (with rolling-rate ETA) only when the driver asked
+PROGRESS = False
+
+
+def progress_cb(label: str):
+    """The suite-side half of the ``--trace`` progress plumbing: a
+    ``stderr_progress`` callback when the driver enabled it, else None
+    (``on_progress=None`` is the no-op default everywhere)."""
+    if not PROGRESS:
+        return None
+    from repro.obs import stderr_progress
+
+    return stderr_progress(label)
+
 
 def artifact_meta() -> Dict:
     """Provenance stamped into every artifact so baseline diffs in CI are
@@ -34,13 +56,30 @@ def artifact_meta() -> Dict:
     return meta
 
 
+def metrics_block(tracer=None, mark: int = 0) -> Dict:
+    """The shared obs "metrics" section every bench artifact carries:
+    span phase totals (from ``tracer`` — defaults to the active one) plus
+    the registry's counters/gauges/histograms.  Empty subsections when
+    nothing was recorded (tracing off), so artifacts stay schema-stable."""
+    from repro import obs
+
+    tr = tracer if tracer is not None else obs.tracer()
+    return {
+        "phases": tr.phase_totals(mark) if tr is not None else {},
+        **obs.registry().snapshot(),
+    }
+
+
 def save_artifact(name: str, payload: Dict, *,
-                  directory: Optional[str] = None) -> str:
+                  directory: Optional[str] = None,
+                  metrics: Optional[Dict] = None) -> str:
     directory = directory or ARTIFACTS
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, name + ".json")
     out = dict(payload)            # callers keep iterating their own dict
+    out["_schema"] = SCHEMA_VERSION
     out["_meta"] = artifact_meta()
+    out["metrics"] = metrics if metrics is not None else metrics_block()
     with open(path, "w") as f:
         json.dump(out, f, indent=1, default=float)
     return path
@@ -81,7 +120,10 @@ def _walk(base, fresh, path: str, tolerance: float, include_times: bool,
                         "detail": "baseline section absent from artifact"})
             return
         for key, bval in base.items():
-            if key == "_meta":
+            # "_"-prefixed sections (_meta, _schema) are provenance, and
+            # "metrics" is the machine-specific obs block — neither is a
+            # gated result, even when an old baseline happens to carry one
+            if key.startswith("_") or key == "metrics":
                 continue
             if key not in fresh:
                 out.append({"path": f"{path}.{key}", "kind": "missing",

@@ -1,223 +1,116 @@
-"""Roofline analysis (§g): three terms per (arch x shape x mesh) cell.
+"""Machine roofline peaks: probed once, cached, consumed by ``repro.obs``.
 
-Reads the dry-run artifacts (launch/dryrun.py) and derives, per device:
+This is the peak-probe half of the fraction-of-peak computation
+(DESIGN.md §12): ``repro.obs.metrics`` owns the pure math
+(``fraction_of_peak(bytes, seconds, peaks)``); this module owns the
+hardware numbers — probed on the machine the benchmarks actually run on,
+never read from a spec sheet, because the achieved-fraction claim (the
+repo's analogue of GSoFa's 47%-of-V100-peak memory throughput) is only
+meaningful against what *this* host can sustain:
 
-  compute term     = HLO_FLOPs_per_device / peak_FLOP/s
-  memory term      = HBM_traffic_per_device / HBM_bw
-  collective term  = collective_bytes_per_device / link_bw
+* **memory bandwidth** — a STREAM-style triad ``a = b + s * c`` over
+  arrays far larger than LLC, best-of-N (3 arrays * 8 bytes moved per
+  element per iteration);
+* **compute** — float64 DGEMM throughput via ``numpy.dot`` on a square
+  operand, best-of-N (2 * m^3 flops).
 
-HLO_FLOPs come from the compositional cost extraction (exact; scan bodies
-multiplied — see launch/costs.py).  Collective bytes are parsed from the
-partitioned HLO (per-device result shapes).  HBM traffic uses an *analytic
-minimum-traffic model* (below) because XLA:CPU's "bytes accessed" counts
-every instruction operand without fusion dedup (~5x inflated, measured) and
-the jnp attention path round-trips score matrices that the Pallas kernels
-keep in VMEM on the real target; both raw numbers are reported alongside.
+Peaks are cached to ``artifacts/machine_peaks.json`` so a full bench run
+probes once; delete the file (or pass ``force=True``) after a hardware
+change.  Bench scripts call ``machine_peaks()`` and hand the dict to
+``repro.obs.roofline_report`` together with the byte/second counters the
+traced pipeline recorded (``fingerprint.bytes``/``gemm.bytes``/...).
 
-Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
-ICI.  Per-device collective bytes / link_bw equals the assignment's
-collective_bytes_global / (chips x link_bw).
+The earlier LM dry-run roofline reader that lived here (TPU v5e spec
+constants against ``launch/dryrun.py`` artifacts) was retired when the
+repo's focus narrowed to the LU pipeline — see ROADMAP "Recent".
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
+import time
 from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-LINK_BW = 50e9               # bytes/s per ICI link
+import numpy as np
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+CACHE_PATH = os.path.join(ARTIFACTS, "machine_peaks.json")
 
-
-def _clamped_micro(cfg, shape) -> int:
-    micro = max(1, cfg.micro_steps) if shape.kind == "train" else 1
-    while shape.global_batch % micro:
-        micro //= 2
-    return max(1, micro)
+# triad arrays sized to defeat any plausible LLC (3 * 32 MiB of float64)
+_TRIAD_ELEMS = 4 * 1024 * 1024
+_GEMM_M = 768
 
 
-def analytic_hbm_traffic(cfg, shape, rec: Dict) -> float:
-    """Per-device HBM bytes for one step — minimum-traffic model.
+def _probe_triad(repeats: int = 5) -> float:
+    """Sustained memory bandwidth in GB/s (STREAM triad, best-of-N)."""
+    b = np.ones(_TRIAD_ELEMS, dtype=np.float64)
+    c = np.full(_TRIAD_ELEMS, 0.5, dtype=np.float64)
+    a = np.empty_like(b)
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.multiply(c, 3.0, out=a)
+        a += b
+        dt = time.perf_counter() - t0
+        # a written + read (the += round-trip), b and c read once each
+        nbytes = 4 * _TRIAD_ELEMS * 8
+        best = max(best, nbytes / dt / 1e9)
+    return best
 
-    Assumes the Pallas kernels for attention (scores stay in VMEM, K/V
-    stream once per query block) and the SSM scans (state resident in
-    VMEM); weights are read once per forward/backward pass; remat re-reads
-    them once more; optimizer states stream once.
+
+def _probe_gemm(repeats: int = 5) -> float:
+    """Sustained float64 GEMM throughput in GFLOP/s (best-of-N)."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((_GEMM_M, _GEMM_M))
+    y = rng.standard_normal((_GEMM_M, _GEMM_M))
+    x @ y                                   # warm the BLAS thread pool
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        x @ y
+        dt = time.perf_counter() - t0
+        best = max(best, 2.0 * _GEMM_M ** 3 / dt / 1e9)
+    return best
+
+
+def machine_peaks(cache_path: Optional[str] = CACHE_PATH, *,
+                  force: bool = False) -> Dict:
+    """{"mem_bw_gbs", "flops_gflops", ...} for this host — cached.
+
+    ``cache_path=None`` probes without touching disk (tests).
     """
-    sb = rec.get("state_bytes_per_device", {})
-    p = sb.get("params", 0.0)
-    o = sb.get("opt", 0.0)
-    caches = sb.get("caches", 0.0)
-    n_batch_shards = 16 if rec["mesh"] == "pod" else 32
-    if shape.global_batch % n_batch_shards:
-        n_batch_shards = 1
-    d = cfg.d_model
-    micro = _clamped_micro(cfg, shape)
-    tokens_loc = shape.global_batch * shape.seq_len / n_batch_shards
-    tok_m = tokens_loc / micro
-    q_chunk = 1024
-
-    n_attn = sum(1 for m, _ in cfg.full_pattern if m in ("attn", "local")) * cfg.n_groups
-    n_local = sum(1 for m, _ in cfg.full_pattern if m == "local") * cfg.n_groups
-    n_mla = sum(1 for m, _ in cfg.full_pattern if m == "mla") * cfg.n_groups
-    n_moe = sum(1 for _, f in cfg.full_pattern if f == "moe") * cfg.n_groups
-    kv_w = 2 * cfg.n_kv_heads * cfg.hd * 2                      # k+v bytes/token
-    lat_w = (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2 if cfg.mla else 0
-
-    if shape.kind == "train":
-        s = shape.seq_len
-        t = 0.0
-        t += micro * 3 * p                     # param reads: fwd + remat + bwd
-        t += micro * 4 * p                     # f32 grad-accum buffer r/w
-        t += 2 * o + p                         # optimizer stream + param write
-        stash = cfg.n_groups * tok_m * d * 2
-        t += micro * 2 * stash                 # remat stash w+r
-        # attention K/V streaming (batch rows per device = tok_m / s)
-        rows = max(1.0, tok_m / s)
-        t += micro * n_attn * rows * (s / q_chunk) * s * kv_w * 0.5   # causal half
-        if n_local:
-            t -= micro * n_local * rows * (s / q_chunk) * max(0, s - cfg.sliding_window - q_chunk) * kv_w * 0.5
-        t += micro * n_mla * rows * (s / q_chunk) * s * lat_w * 0.5
-        if cfg.moe:
-            disp = tok_m * cfg.moe.top_k * cfg.moe.capacity_factor * d * 2 / 16
-            t += micro * 4 * n_moe * disp
-        # chunked CE logits r/w (f32, vocab model-sharded 16-way when divisible)
-        v_loc = cfg.vocab / (16 if cfg.vocab % 16 == 0 else 1)
-        t += micro * 2 * tok_m * v_loc * 4
-        t += micro * 3 * tok_m * d * 2         # embed fwd + bwd scatter
-        t *= 2.0                               # bwd activation traffic ~ fwd
-        return t
-
-    if shape.kind == "prefill":
-        s = shape.seq_len
-        rows = max(1.0, tokens_loc / s)
-        t = p
-        n_layers = len(cfg.full_pattern) * cfg.n_groups
-        t += n_layers * 4 * tokens_loc * d * 2          # layer activations r/w
-        t += n_attn * rows * (s / q_chunk) * s * kv_w * 0.5
-        if n_local:
-            t -= n_local * rows * (s / q_chunk) * max(0, s - cfg.sliding_window - q_chunk) * kv_w * 0.5
-        t += n_mla * rows * (s / q_chunk) * s * lat_w * 0.5
-        t += caches                                     # cache write
-        if cfg.moe:
-            t += 4 * n_moe * tokens_loc * cfg.moe.top_k * cfg.moe.capacity_factor * d * 2 / 16
-        return t
-
-    # decode: params read (all resident experts in the dense-EP impl),
-    # full cache read + slot write, small activations
-    return p + caches + 64 * d * 2 * len(cfg.full_pattern) * cfg.n_groups
-
-
-def model_flops(cfg, shape) -> float:
-    """Global MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (inference),
-    plus the attention score/value matmuls (2*2*T_ctx*d_attn per token per
-    attention layer, causal-halved), which 6ND ignores and which dominate at
-    32k+ context."""
-    n = cfg.active_param_count()
-    d_attn = cfg.n_heads * cfg.hd
-    s = shape.seq_len
-    per_layer_ctx = {"attn": s, "local": min(s, cfg.sliding_window),
-                     "mla": s}
-    if shape.kind == "decode":
-        toks = shape.global_batch
-        attn = sum(4.0 * per_layer_ctx[m] * d_attn
-                   for m, _ in cfg.full_pattern if m in per_layer_ctx
-                   ) * cfg.n_groups * toks
-        return 2.0 * n * toks + attn
-    toks = shape.global_batch * s
-    attn = sum(4.0 * per_layer_ctx[m] * 0.5 * d_attn
-               for m, _ in cfg.full_pattern if m in per_layer_ctx
-               ) * cfg.n_groups * toks
-    mult = 3.0 if shape.kind == "train" else 1.0
-    base = (6.0 if shape.kind == "train" else 2.0) * n * toks
-    return base + mult * attn
-
-
-def suggest(dom: str, cfg, shape, frac: float) -> str:
-    if dom == "collective":
-        return ("shrink/overlap the TP all-gathers (fuse collectives with the "
-                "following matmul, or move FSDP gathers off the critical path)")
-    if dom == "memory":
-        if shape.kind == "decode":
-            return ("decode is cache/weight-bandwidth bound: shard the cache "
-                    "over more axes or batch more requests per chip")
-        return ("cut optimizer/stash traffic: fewer micro-steps, bf16 opt "
-                "states, or offload the master copy")
-    if frac < 0.2:
-        return ("compute-bound but far off peak: the model axis does "
-                "redundant work for this arch — reshard batch over "
-                "(data x model) or shrink TP")
-    return "compute-bound near peak: increase per-chip batch or fuse pointwise ops"
-
-
-def analyze_record(rec: Dict) -> Optional[Dict]:
-    from repro.configs.base import SHAPES, get_config
-    if "error" in rec or "skipped" in rec or rec.get("arch") == "gsofa":
-        return None
-    cfg = get_config(rec["arch"])
-    shape = SHAPES[rec["shape"]]
-    costs = rec.get("costs")
-    if costs:
-        fl = costs["totals_per_device"]["flops"]
-        coll = costs["totals_per_device"]["collective_bytes"]
-        xla_bytes = costs["totals_per_device"]["hbm_bytes"]
-    else:
-        fl = rec["full_step"]["flops"]
-        coll = rec["full_step"]["collectives"]["total_bytes"]
-        xla_bytes = rec["full_step"]["hbm_bytes"]
-    mem_bytes = analytic_hbm_traffic(cfg, shape, rec)
-    t_c = fl / PEAK_FLOPS
-    t_m = mem_bytes / HBM_BW
-    t_l = coll / LINK_BW
-    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
-              key=lambda kv: kv[1])[0]
-    mf = model_flops(cfg, shape)
-    n_dev = rec["n_devices"]
-    useful = mf / max(1.0, fl * n_dev)
-    step_time = max(t_c, t_m, t_l)           # perfect-overlap bound
-    mfu = mf / max(1e-9, step_time) / (n_dev * PEAK_FLOPS)
-    return {
-        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
-        "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
-        "dominant": dom, "model_flops": mf, "hlo_flops_per_dev": fl,
-        "useful_flop_ratio": useful, "roofline_mfu": mfu,
-        "mem_bytes_analytic": mem_bytes, "mem_bytes_xla": xla_bytes,
-        "coll_bytes_per_dev": coll,
-        "fits_hbm_16g": rec["memory"]["peak_bytes_est"] < 16e9,
-        "peak_bytes": rec["memory"]["peak_bytes_est"],
-        "suggestion": suggest(dom, cfg, shape, mfu),
+    if cache_path and not force and os.path.exists(cache_path):
+        try:
+            with open(cache_path) as f:
+                peaks = json.load(f)
+            if "mem_bw_gbs" in peaks and "flops_gflops" in peaks:
+                return peaks
+        except (json.JSONDecodeError, OSError):
+            pass                            # stale/corrupt cache: re-probe
+    peaks = {
+        "mem_bw_gbs": _probe_triad(),
+        "flops_gflops": _probe_gemm(),
+        "probe": {
+            "triad_mib": _TRIAD_ELEMS * 8 * 3 / 2 ** 20,
+            "gemm_m": _GEMM_M,
+            "dtype": "float64",
+        },
+        "probed_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }
-
-
-def load_all(mesh: str = "pod") -> Dict[str, Dict]:
-    out = {}
-    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
-        rec = json.load(open(path))
-        r = analyze_record(rec)
-        if r:
-            out[f"{r['arch']}__{r['shape']}"] = r
-    return out
+    if cache_path:
+        os.makedirs(os.path.dirname(cache_path), exist_ok=True)
+        with open(cache_path, "w") as f:
+            json.dump(peaks, f, indent=1)
+    return peaks
 
 
 def main() -> None:
-    rows = load_all("pod")
-    if not rows:
-        print("no dry-run artifacts found — run: python -m repro.launch.dryrun --sweep")
-        return
-    hdr = ["cell", "compute_s", "memory_s", "collective_s", "dominant",
-           "MFU-bound", "useful/HLO", "fits16G"]
-    print("| " + " | ".join(hdr) + " |")
-    print("|" + "|".join(["---"] * len(hdr)) + "|")
-    for key, r in sorted(rows.items()):
-        print(f"| {key} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
-              f"{r['collective_s']:.3f} | {r['dominant']} | "
-              f"{r['roofline_mfu']*100:.1f}% | {r['useful_flop_ratio']*100:.1f}% | "
-              f"{'Y' if r['fits_hbm_16g'] else 'N'} |")
-    with open(os.path.join(os.path.dirname(ART_DIR), "roofline.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    peaks = machine_peaks(force=True)
+    print(f"machine peaks (probed, cached to {os.path.relpath(CACHE_PATH)}):")
+    print(f"  memory bandwidth : {peaks['mem_bw_gbs']:8.2f} GB/s  "
+          f"(STREAM triad, {peaks['probe']['triad_mib']:.0f} MiB working set)")
+    print(f"  float64 compute  : {peaks['flops_gflops']:8.2f} GFLOP/s "
+          f"(DGEMM m={peaks['probe']['gemm_m']})")
 
 
 if __name__ == "__main__":

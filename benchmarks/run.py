@@ -1,8 +1,10 @@
-"""Benchmark driver: one module per paper table/figure + the roofline reader.
+"""Benchmark driver: one module per paper table/figure + the roofline probe.
 
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run --only speedup,space
     PYTHONPATH=src python -m benchmarks.run --check-baseline
+    PYTHONPATH=src python -m benchmarks.run --trace     # + Chrome traces
+    PYTHONPATH=src python -m benchmarks.run --validate-traces
 
 Paper-figure map:
   workload     -> Fig 3   (per-source workload growth)
@@ -15,7 +17,7 @@ Paper-figure map:
   solve        -> DESIGN.md §9 (packed CSC-panel storage + solve/refinement)
   refactorize  -> DESIGN.md §10 (plan reuse: analyze once, refactorize many)
   distributed  -> DESIGN.md §11 (panel placement + 8-device analyze parity)
-  roofline     -> EXPERIMENTS.md §Roofline (reads dry-run artifacts)
+  roofline     -> DESIGN.md §12 (machine peak probe: STREAM triad + DGEMM)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
 
@@ -24,12 +26,44 @@ are compared against the committed ``baselines/*.json``.  Machine-portable
 ratio metrics (speedups) are gated at ``--tolerance`` (default 25%); absolute
 times participate only with ``--check-times`` (opt-in for like-for-like
 hardware).  Exits nonzero on any regression.
+
+``--trace`` (DESIGN.md §12) wraps every selected suite in
+``repro.obs.tracing``, writing a Perfetto-loadable Chrome trace to
+``artifacts/trace_<suite>.json`` per suite (the registry is reset per suite
+so each artifact's ``metrics`` block is that suite's own), and turns on
+rate-limited stderr progress/ETA lines for the long analyzes.
+``--validate-traces`` is the matching CI smoke step: every expected trace
+must parse as Chrome trace-event JSON and contain at least one span for
+each of the suite's required phases (wiring rot in the instrumentation
+fails loudly, not by silently emitting empty traces).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+# span names every suite's trace must contain at least once under --trace
+# (the span taxonomy is DESIGN.md §12; suites listed with an empty set are
+# parse-validated only — e.g. roofline probes record no pipeline spans)
+REQUIRED_PHASES = {
+    "workload": ["fixpoint_chunk"],
+    "balance": ["fixpoint_chunk"],
+    "concurrency": ["fixpoint_chunk"],
+    "speedup": ["fixpoint_chunk"],
+    "space": ["fixpoint", "fixpoint_chunk"],
+    "supernode": ["fingerprint_update", "supernode_detect"],
+    "numeric": ["analyze", "fixpoint", "supernode_detect", "factorize",
+                "factor_level", "scatter_values"],
+    "solve": ["analyze", "factorize", "solve_forward", "solve_backward"],
+    "refactorize": ["analyze", "factorize", "factor_level",
+                    "solve_forward"],
+    "distributed": ["analyze", "placement", "factorize", "factor_level",
+                    "factor_segment", "solve_forward", "solve_backward"],
+    "roofline": [],
+}
 
 
 def check_baseline(tolerance: float, include_times: bool,
@@ -49,6 +83,50 @@ def check_baseline(tolerance: float, include_times: bool,
     sys.exit(1)
 
 
+def validate_traces(only: set) -> None:
+    from benchmarks.common import ARTIFACTS
+
+    names = [n for n in REQUIRED_PHASES if not only or n in only]
+    failures = []
+    for name in names:
+        path = os.path.join(ARTIFACTS, f"trace_{name}.json")
+        if not os.path.exists(path):
+            failures.append(f"{name}: trace file missing ({path}) — was the "
+                            f"suite run with --trace?")
+            continue
+        try:
+            with open(path) as f:
+                events = json.load(f)
+        except json.JSONDecodeError as e:
+            failures.append(f"{name}: trace is not valid JSON ({e})")
+            continue
+        if isinstance(events, dict):           # JSON-object trace format
+            events = events.get("traceEvents")
+        if not isinstance(events, list):
+            failures.append(f"{name}: Chrome trace must be a JSON array or "
+                            f"an object with a 'traceEvents' array")
+            continue
+        spans = [e for e in events if isinstance(e, dict)
+                 and e.get("ph") == "X"]
+        bad = [e for e in spans
+               if not {"name", "ts", "dur", "pid", "tid"} <= e.keys()]
+        if bad:
+            failures.append(f"{name}: {len(bad)} complete event(s) missing "
+                            f"required keys (name/ts/dur/pid/tid)")
+        seen = {e["name"] for e in spans if "name" in e}
+        for phase in REQUIRED_PHASES[name]:
+            if phase not in seen:
+                failures.append(f"{name}: no '{phase}' span in trace "
+                                f"(has: {sorted(seen)[:12]})")
+    if failures:
+        print(f"trace validation: {len(failures)} failure(s)")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print(f"trace validation: OK ({len(names)} trace(s), every required "
+          f"phase present)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -62,13 +140,23 @@ def main() -> None:
                          "meaningful on the hardware that recorded the "
                          "baselines)")
     ap.add_argument("--baseline-dir", default=None)
+    ap.add_argument("--trace", action="store_true",
+                    help="wrap each suite in repro.obs.tracing, writing "
+                         "artifacts/trace_<suite>.json, and print stderr "
+                         "progress for long analyzes")
+    ap.add_argument("--validate-traces", action="store_true",
+                    help="validate previously written traces: Chrome "
+                         "trace-event JSON with >=1 span per required phase")
     args = ap.parse_args()
+
+    only = set(filter(None, args.only.split(",")))
 
     if args.check_baseline:
         check_baseline(args.tolerance, args.check_times, args.baseline_dir)
         return
-
-    only = set(filter(None, args.only.split(",")))
+    if args.validate_traces:
+        validate_traces(only)
+        return
 
     from benchmarks import (bench_balance, bench_concurrency,
                             bench_distributed, bench_numeric,
@@ -88,6 +176,13 @@ def main() -> None:
         ("distributed", bench_distributed.main),
         ("roofline", roofline.main),
     ]
+    if args.trace:
+        import benchmarks.common as common
+        from repro import obs
+
+        common.PROGRESS = True
+        os.makedirs(common.ARTIFACTS, exist_ok=True)
+
     failures = []
     for name, fn in suites:
         if only and name not in only:
@@ -95,7 +190,17 @@ def main() -> None:
         t0 = time.time()
         print(f"\n===== {name} =====")
         try:
-            fn()
+            if args.trace:
+                # fresh counters per suite so each artifact's metrics block
+                # is self-contained; the trace writes even if the suite
+                # raises (wiring rot stays diagnosable from the artifact)
+                obs.registry().reset()
+                trace_path = os.path.join(common.ARTIFACTS,
+                                          f"trace_{name}.json")
+                with obs.tracing(trace_path):
+                    fn()
+            else:
+                fn()
         except Exception as e:  # keep the suite running; report at the end
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
             failures.append(name)

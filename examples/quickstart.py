@@ -35,7 +35,9 @@ def main() -> None:
     #    with streamed supernode detection and CSC pattern extraction riding
     #    along on the same fixpoint chunks, plus every value-independent
     #    precomputation of the numeric pipeline
-    plan = repro.analyze(a, repro.LUOptions(concurrency=256))
+    #    (trace=True turns on the obs span tracing — DESIGN.md §12 — so
+    #    step 6 can print where the time went; off, it costs one boolean)
+    plan = repro.analyze(a, repro.LUOptions(concurrency=256, trace=True))
     sym = plan.sym
     print(f"L+U nonzeros: {sym.lu_nnz}  fill ratio: {sym.fill_ratio:.2f}")
     print(f"effective #C: {sym.concurrency}  supersteps: {sym.supersteps} "
@@ -85,6 +87,14 @@ def main() -> None:
           f"{sol.residual:.2e} after {sol.refine_accepted} refinement "
           f"step(s) in {sol.solve_s*1e3:.1f} ms "
           f"(history {['%.1e' % r for r in sol.residuals]})")
+
+    # 6. where did the time go?  trace=True populated span-summary trees on
+    #    the plan and on every factorization from it — the same spans a
+    #    repro.obs.tracing("trace.json") block exports for Perfetto
+    print("\nanalyze span tree (plan.stats):")
+    print(plan.stats)
+    print("\nfactorize span tree (factor.stats):")
+    print(factor.stats)
 
 
 if __name__ == "__main__":

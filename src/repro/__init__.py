@@ -41,12 +41,16 @@ _LAZY_EXPORTS = {
     "CSRMatrix": "repro.sparse",
 }
 
-__all__ = ["__version__", *_LAZY_EXPORTS]
+__all__ = ["__version__", "obs", *_LAZY_EXPORTS]
 
 
 def __getattr__(name):
-    if name in _LAZY_EXPORTS:
-        import importlib
+    import importlib
 
+    if name == "obs":
+        # the observability subsystem is addressed as a module
+        # (``repro.obs.tracing`` / ``repro.obs.registry``, DESIGN.md §12)
+        return importlib.import_module("repro.obs")
+    if name in _LAZY_EXPORTS:
         return getattr(importlib.import_module(_LAZY_EXPORTS[name]), name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -69,6 +69,8 @@ from repro.numeric.solve import SolveResult, SolveSchedule, build_solve_schedule
 from repro.numeric.solve import solve as _solve
 from repro.numeric.storage import CSCPattern, CsrScatterMaps, PanelStore
 from repro.numeric.supernodal import NumericResult, factor_on_store
+from repro.obs import trace as _ot
+from repro.obs.trace import SpanSummary
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import generic_values_csr
 
@@ -128,6 +130,11 @@ class LUOptions:
     refine_tol: Optional[float] = None
     # -- distribution (DESIGN.md §11)
     distribute: bool = False
+    # -- observability (DESIGN.md §12): record phase spans + counters for
+    # this plan's analyze/factorize calls (repro.obs); plans/factors gain a
+    # ``stats`` summary tree.  Off by default — the disabled path is a
+    # module-level boolean check, so it cannot perturb timings.
+    trace: bool = False
 
     def __post_init__(self):
         if self.backend not in _SYMBOLIC_BACKENDS:
@@ -161,6 +168,9 @@ class LUFactorization:
     num: NumericResult
     values: np.ndarray           # what was factored (refinement matvec)
     factor_s: float              # scatter + panel-sweep wall time
+    # span summary of this factorization (tracing enabled only): the same
+    # spans the Chrome trace carries, rendered as a text tree by ``str()``
+    stats: Optional[SpanSummary] = None
 
     @property
     def n(self) -> int:
@@ -229,6 +239,9 @@ class LUPlan:
     # plan pickles; the mesh itself is never stored — rebuild one with
     # ``launch.mesh.make_flat_mesh`` where live devices are needed
     placement: Optional[PanelPlacement] = None
+    # span summary of the analyze that built this plan (tracing enabled
+    # only); picklable like everything else on the plan
+    stats: Optional[SpanSummary] = None
 
     @property
     def n(self) -> int:
@@ -265,18 +278,23 @@ class LUPlan:
                  else PanelStore.from_structure(self.store_template))
         store._solve_schedule = self.solve_schedule
         store._placement = self.placement       # per-device solve segments
-        num = factor_on_store(
-            self.a, values, store, self.schedule,
-            backend=self.options.numeric_backend,
-            piv_tol=self.options.piv_tol,
-            check_pattern=self.options.check_pattern,
-            pattern_tol=self.options.pattern_tol,
-            maps=self.gather_maps, csr_maps=self.csr_maps,
-            store_is_zeroed=_reuse_store is None,
-            placement=self.placement)
+        with _ot.ensure(self.options.trace) as tr:
+            mark = tr.mark() if tr is not None else 0
+            with _ot.span("factorize"):
+                num = factor_on_store(
+                    self.a, values, store, self.schedule,
+                    backend=self.options.numeric_backend,
+                    piv_tol=self.options.piv_tol,
+                    check_pattern=self.options.check_pattern,
+                    pattern_tol=self.options.pattern_tol,
+                    maps=self.gather_maps, csr_maps=self.csr_maps,
+                    store_is_zeroed=_reuse_store is None,
+                    placement=self.placement)
+            stats = tr.summary(mark) if tr is not None else None
         return LUFactorization(plan=self, num=num,
                                values=np.asarray(values, dtype=np.float64),
-                               factor_s=time.perf_counter() - t0)
+                               factor_s=time.perf_counter() - t0,
+                               stats=stats)
 
     def solve(self, b: np.ndarray,
               values: Optional[np.ndarray] = None) -> SolveResult:
@@ -289,7 +307,7 @@ class LUPlan:
 
 
 def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
-            mesh=None) -> LUPlan:
+            mesh=None, on_progress=None) -> LUPlan:
     """Symbolic analysis of ``a``: one fixpoint pass streams out the L/U
     counts, the supernode partition (fingerprints), and the sparse
     ``CSCPattern``; everything value-independent downstream (schedules,
@@ -316,29 +334,38 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
         from repro.launch.mesh import make_flat_mesh
 
         mesh = make_flat_mesh()
-    sym = _symbolic_factorize(
-        a, concurrency=opts.concurrency, backend=opts.backend,
-        combined=opts.combined, bubble=opts.bubble,
-        use_arena=opts.use_arena, budget_bytes=opts.budget_bytes,
-        checkpoint_path=opts.checkpoint_path,
-        detect_supernodes=True, supernode_relax=opts.supernode_relax,
-        supernode_max_size=opts.supernode_max_size,
-        collect_pattern=True, mesh=mesh)
-    pattern = sym.pattern
-    schedule = build_schedule(pattern, sym.supernodes, n_bins=opts.n_bins,
-                              policy=opts.policy)
-    store_template = PanelStore(pattern, schedule.supernodes)
-    gather_maps = build_gather_maps(store_template, schedule)
-    csr_maps = store_template.csr_maps(a)
-    solve_schedule = build_solve_schedule(store_template)
-    placement = None
-    if mesh is not None:
-        n_devices = int(np.prod(list(mesh.shape.values())))
-        placement = build_placement(schedule, n_devices,
-                                    axis=mesh.axis_names[0])
+    with _ot.ensure(opts.trace) as tr:
+        mark = tr.mark() if tr is not None else 0
+        with _ot.span("analyze"):
+            sym = _symbolic_factorize(
+                a, concurrency=opts.concurrency, backend=opts.backend,
+                combined=opts.combined, bubble=opts.bubble,
+                use_arena=opts.use_arena, budget_bytes=opts.budget_bytes,
+                checkpoint_path=opts.checkpoint_path,
+                detect_supernodes=True,
+                supernode_relax=opts.supernode_relax,
+                supernode_max_size=opts.supernode_max_size,
+                collect_pattern=True, mesh=mesh, on_progress=on_progress)
+            pattern = sym.pattern
+            with _ot.span("build_schedule"):
+                schedule = build_schedule(pattern, sym.supernodes,
+                                          n_bins=opts.n_bins,
+                                          policy=opts.policy)
+                store_template = PanelStore(pattern, schedule.supernodes)
+            with _ot.span("gather_maps"):
+                gather_maps = build_gather_maps(store_template, schedule)
+                csr_maps = store_template.csr_maps(a)
+            with _ot.span("solve_schedule"):
+                solve_schedule = build_solve_schedule(store_template)
+            placement = None
+            if mesh is not None:
+                n_devices = int(np.prod(list(mesh.shape.values())))
+                placement = build_placement(schedule, n_devices,
+                                            axis=mesh.axis_names[0])
+        stats = tr.summary(mark) if tr is not None else None
     return LUPlan(a=a, options=opts, sym=sym, pattern=pattern,
                   schedule=schedule, store_template=store_template,
                   gather_maps=gather_maps, csr_maps=csr_maps,
                   solve_schedule=solve_schedule,
                   analyze_s=time.perf_counter() - t0,
-                  placement=placement)
+                  placement=placement, stats=stats)

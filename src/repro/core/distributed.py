@@ -41,6 +41,8 @@ from repro.compat import SHARD_MAP_NOCHECK_KW, shard_map
 from repro.core.gsofa import (
     SymbolicGraph, fill_masks, fixpoint_impl, init_labels, row_counts,
 )
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 
 
 def assign_sources(n: int, n_shards: int, *, policy: str = "interleave") -> np.ndarray:
@@ -224,7 +226,8 @@ def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
                             policy: str = "interleave",
                             axes: Optional[tuple] = None,
                             on_shard_chunk: Optional[Callable] = None,
-                            on_shard_mask: Optional[Callable] = None):
+                            on_shard_mask: Optional[Callable] = None,
+                            on_progress: Optional[Callable] = None):
     """Multi-source symbolic fixpoint sharded over the mesh, streaming each
     shard's converged chunks back to the host.
 
@@ -237,6 +240,10 @@ def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
     *identical* to the single-device driver's (the fixpoint is unique and
     chunking-independent), so counts, fingerprints, and patterns are
     bitwise-equal to ``run_multisource`` at any device count.
+
+    ``on_progress(done, total, eta_s)`` (optional) fires after every
+    sharded chunk step with a rolling-rate ETA — the same callback shape
+    ``run_multisource`` takes, surfaced as ``analyze(on_progress=...)``.
 
     Returns a ``core.multisource.MultiSourceResult`` plus a ``stats`` dict
     (per-device edge checks, balance ratio) attached as ``result.dist``.
@@ -261,38 +268,48 @@ def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
     supersteps = 0
     n_chunks = 0
 
+    total_steps = -(-per // concurrency)
+    meter = _om.ProgressMeter(on_progress) if on_progress is not None else None
     for start in range(0, per, concurrency):
-        cols = srcs_mat[:, start:start + concurrency]
-        own = owned[:, start:start + concurrency]
-        if cols.shape[1] < concurrency:
-            # fixed step shape: pad by repeating each shard's last column
-            # (duplicate sources are idempotent and never owned twice)
-            short = concurrency - cols.shape[1]
-            cols = np.concatenate(
-                [cols, np.repeat(cols[:, -1:], short, axis=1)], axis=1)
-            own = np.concatenate(
-                [own, np.zeros((n_shards, short), dtype=bool)], axis=1)
-        labels, mask, l_cnt, u_cnt, edges, iters = step(
-            jnp.asarray(cols), graph)
-        labels = np.asarray(labels)
-        mask = np.asarray(mask)
-        l_cnt, u_cnt = np.asarray(l_cnt), np.asarray(u_cnt)
-        edges = np.asarray(edges)
-        for d in range(n_shards):
-            keep = own[d]
-            srcs_d = cols[d][keep]
-            l_counts[srcs_d] = l_cnt[d][keep]
-            u_counts[srcs_d] = u_cnt[d][keep]
-            edge_checks[srcs_d] = edges[d][keep]
-            per_dev_edges[d] += int(edges[d][keep].sum())
-            if on_shard_chunk is not None and keep.any():
-                on_shard_chunk(d, labels[d][keep], srcs_d)
-            if on_shard_mask is not None:
-                on_shard_mask(d, mask[d], cols[d])
-        # per-shard while_loop trip counts differ by design; the step's
-        # wall-clock is the slowest shard's count
-        supersteps += int(np.asarray(iters).max())
-        n_chunks += 1
+        with _ot.span("fixpoint_chunk"):
+            cols = srcs_mat[:, start:start + concurrency]
+            own = owned[:, start:start + concurrency]
+            if cols.shape[1] < concurrency:
+                # fixed step shape: pad by repeating each shard's last column
+                # (duplicate sources are idempotent and never owned twice)
+                short = concurrency - cols.shape[1]
+                cols = np.concatenate(
+                    [cols, np.repeat(cols[:, -1:], short, axis=1)], axis=1)
+                own = np.concatenate(
+                    [own, np.zeros((n_shards, short), dtype=bool)], axis=1)
+            labels, mask, l_cnt, u_cnt, edges, iters = step(
+                jnp.asarray(cols), graph)
+            labels = np.asarray(labels)
+            mask = np.asarray(mask)
+            l_cnt, u_cnt = np.asarray(l_cnt), np.asarray(u_cnt)
+            edges = np.asarray(edges)
+            with _ot.span("host_reduce"):
+                for d in range(n_shards):
+                    keep = own[d]
+                    srcs_d = cols[d][keep]
+                    l_counts[srcs_d] = l_cnt[d][keep]
+                    u_counts[srcs_d] = u_cnt[d][keep]
+                    edge_checks[srcs_d] = edges[d][keep]
+                    per_dev_edges[d] += int(edges[d][keep].sum())
+                    if on_shard_chunk is not None and keep.any():
+                        on_shard_chunk(d, labels[d][keep], srcs_d)
+                    if on_shard_mask is not None:
+                        on_shard_mask(d, mask[d], cols[d])
+            # per-shard while_loop trip counts differ by design; the step's
+            # wall-clock is the slowest shard's count
+            supersteps += int(np.asarray(iters).max())
+            n_chunks += 1
+            if _ot.ENABLED:
+                _om.registry().observe("fixpoint.iterations",
+                                       int(np.asarray(iters).max()))
+                _om.registry().count("fixpoint.chunks")
+        if meter is not None:
+            meter.update(n_chunks, total_steps)
 
     result = MultiSourceResult(
         l_counts=l_counts, u_counts=u_counts, edge_checks=edge_checks,

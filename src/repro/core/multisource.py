@@ -31,6 +31,8 @@ from repro.core.gsofa import (
     init_labels, relax_ell, row_counts,
 )
 from repro.core.spaceopt import LabelArena, auto_concurrency
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +120,9 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
                     sources: Optional[np.ndarray] = None,
                     collect_masks: bool = False,
                     on_chunk: Optional[Callable] = None,
-                    on_mask: Optional[Callable] = None) -> MultiSourceResult:
+                    on_mask: Optional[Callable] = None,
+                    on_progress: Optional[Callable] = None
+                    ) -> MultiSourceResult:
     """Single-device multi-source driver: plan chunks, run fixpoints, aggregate.
 
     ``on_chunk(labels, srcs, offset)`` is invoked with every converged label
@@ -134,6 +138,10 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
     (core.symbolic.PatternCollector) without ever gathering a dense (n, n)
     pattern on the host: each delivery is O(concurrency * n) and is reduced
     to per-row index lists before the next chunk arrives.
+
+    ``on_progress(done, total, eta_s)`` fires once per completed chunk with
+    a rolling-rate ETA (``repro.obs.ProgressMeter``) — the opt-in progress
+    surface for long analyzes (bbd-20k runs ~88 s otherwise silent).
     """
     n = graph.n
     concurrency = auto_concurrency(graph, budget_bytes, concurrency, backend)
@@ -162,54 +170,66 @@ def run_multisource(graph: SymbolicGraph, *, concurrency: int = 64,
     masks = np.zeros((n, n), dtype=bool) if collect_masks else None
     supersteps = 0
 
-    for chunk in chunks:
+    meter = _om.ProgressMeter(on_progress) if on_progress is not None else None
+    for ci, chunk in enumerate(chunks):
         srcs = jnp.asarray(chunk.srcs)
         if combined:
             groups = [np.arange(len(chunk.srcs))]
         else:
             groups = [np.array([i]) for i in range(chunk.n_real)]
         for g in groups:
-            gs = srcs[jnp.asarray(g)]
-            if bubble and chunk.width < n:
-                offset = 0
-                view = _chunk_view(graph, chunk.width)
-                nbrs = graph.out_ell[gs]
-                labels0 = init_labels(view, gs, nbrs=nbrs)
-                res = gsofa.gsofa_batch(view, gs, backend="ell",
-                                        labels0=labels0, max_iters=chunk.width + 2)
-                mask = _finalize_bubble(graph, res.labels, gs, 0, chunk.width)
-                v_ids = jnp.arange(n, dtype=jnp.int32)
-                l_cnt = jnp.sum(mask & (v_ids[None, :] < gs[:, None]), axis=1)
-                u_cnt = jnp.sum(mask & (v_ids[None, :] > gs[:, None]), axis=1)
-            else:
-                offset = 0
-                labels0 = None
-                if arena is not None and combined:
-                    offset = arena.next_window()
-                    labels0 = init_labels(graph, gs, offset=offset,
-                                          stale_buf=arena.buf)
-                res = gsofa.gsofa_batch(graph, gs, backend=backend,
-                                        labels0=labels0, offset=offset)
-                if arena is not None and combined:
-                    arena.buf = res.labels
-                mask = None
-                if collect_masks or on_mask is not None:
-                    mask = fill_masks(res.labels, gs, offset)
-                l_cnt, u_cnt = row_counts(res.labels, gs, offset)
+            with _ot.span("fixpoint_chunk"):
+                gs = srcs[jnp.asarray(g)]
+                if bubble and chunk.width < n:
+                    offset = 0
+                    view = _chunk_view(graph, chunk.width)
+                    nbrs = graph.out_ell[gs]
+                    labels0 = init_labels(view, gs, nbrs=nbrs)
+                    res = gsofa.gsofa_batch(view, gs, backend="ell",
+                                            labels0=labels0,
+                                            max_iters=chunk.width + 2)
+                    mask = _finalize_bubble(graph, res.labels, gs, 0,
+                                            chunk.width)
+                    v_ids = jnp.arange(n, dtype=jnp.int32)
+                    l_cnt = jnp.sum(mask & (v_ids[None, :] < gs[:, None]),
+                                    axis=1)
+                    u_cnt = jnp.sum(mask & (v_ids[None, :] > gs[:, None]),
+                                    axis=1)
+                else:
+                    offset = 0
+                    labels0 = None
+                    if arena is not None and combined:
+                        offset = arena.next_window()
+                        labels0 = init_labels(graph, gs, offset=offset,
+                                              stale_buf=arena.buf)
+                    res = gsofa.gsofa_batch(graph, gs, backend=backend,
+                                            labels0=labels0, offset=offset)
+                    if arena is not None and combined:
+                        arena.buf = res.labels
+                    mask = None
+                    if collect_masks or on_mask is not None:
+                        mask = fill_masks(res.labels, gs, offset)
+                    l_cnt, u_cnt = row_counts(res.labels, gs, offset)
 
-            if on_chunk is not None:
-                on_chunk(res.labels, chunk.srcs[np.asarray(g)], offset)
-            if on_mask is not None:
-                on_mask(mask, chunk.srcs[np.asarray(g)])
-            real = np.asarray(g) < chunk.n_real
-            real_idx = chunk.srcs[np.asarray(g)[real]]
-            l_counts[real_idx] = np.asarray(l_cnt)[real]
-            u_counts[real_idx] = np.asarray(u_cnt)[real]
-            edge_checks[real_idx] = np.asarray(res.edge_checks)[real]
-            conv_iters[real_idx] = np.asarray(res.conv_iter)[real]
-            supersteps += int(res.iters)
-            if collect_masks and mask is not None:
-                masks[real_idx] = np.asarray(mask)[real]
+                if on_chunk is not None:
+                    on_chunk(res.labels, chunk.srcs[np.asarray(g)], offset)
+                if on_mask is not None:
+                    on_mask(mask, chunk.srcs[np.asarray(g)])
+                real = np.asarray(g) < chunk.n_real
+                real_idx = chunk.srcs[np.asarray(g)[real]]
+                l_counts[real_idx] = np.asarray(l_cnt)[real]
+                u_counts[real_idx] = np.asarray(u_cnt)[real]
+                edge_checks[real_idx] = np.asarray(res.edge_checks)[real]
+                conv_iters[real_idx] = np.asarray(res.conv_iter)[real]
+                supersteps += int(res.iters)
+                if collect_masks and mask is not None:
+                    masks[real_idx] = np.asarray(mask)[real]
+                if _ot.ENABLED:
+                    _om.registry().observe("fixpoint.iterations",
+                                           int(res.iters))
+                    _om.registry().count("fixpoint.chunks")
+        if meter is not None:
+            meter.update(ci + 1, len(chunks))
 
     result = MultiSourceResult(
         l_counts=l_counts, u_counts=u_counts, edge_checks=edge_checks,

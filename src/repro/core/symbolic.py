@@ -19,6 +19,8 @@ import numpy as np
 from repro.core.gsofa import SymbolicGraph, prepare_graph
 from repro.core.multisource import MultiSourceResult, run_multisource
 from repro.core.spaceopt import aux_memory_report, auto_concurrency
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 from repro.sparse.csr import CSRMatrix
 
 
@@ -161,6 +163,12 @@ class PatternCollector:
 
     def update(self, mask, srcs: np.ndarray) -> int:
         """Accumulate one chunk's fill mask; returns #new rows consumed."""
+        if not _ot.ENABLED:
+            return self._update(mask, srcs)
+        with _ot.span("pattern_collect"):
+            return self._update(mask, srcs)
+
+    def _update(self, mask, srcs: np.ndarray) -> int:
         srcs = np.asarray(srcs, dtype=np.int64)
         _, first = np.unique(srcs, return_index=True)
         keep = first[~self.seen[srcs[first]]]
@@ -203,7 +211,8 @@ def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
                                     supernode_relax: int,
                                     supernode_max_size: int,
                                     collect_pattern: bool,
-                                    t0: float) -> SymbolicResult:
+                                    t0: float,
+                                    on_progress=None) -> SymbolicResult:
     """Mesh-sharded symbolic pass (DESIGN.md §11): the multi-source fixpoint
     runs inside ``core.distributed``'s shard_map chunk step; per-shard
     supernode fingerprints accumulate from the streamed label matrices and
@@ -238,9 +247,11 @@ def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
             collector.update(mask, srcs)
 
     eff_c = auto_concurrency(graph, budget_bytes, concurrency, backend)
-    ms = distributed_multisource(
-        graph, mesh, concurrency=eff_c, backend=backend,
-        on_shard_chunk=on_shard_chunk, on_shard_mask=on_shard_mask)
+    with _ot.span("fixpoint"):
+        ms = distributed_multisource(
+            graph, mesh, concurrency=eff_c, backend=backend,
+            on_shard_chunk=on_shard_chunk, on_shard_mask=on_shard_mask,
+            on_progress=on_progress)
 
     sn_ranges = None
     sn_count = 0
@@ -248,15 +259,16 @@ def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
     if fp_shards is not None:
         from repro.supernodes import detect_from_fingerprints, supernode_stats
 
-        if len(axes) == 1:
-            # device-side merge: one ring collective per accumulator
-            fp = merge_fingerprint_shards(mesh, axes[0], fp_shards)
-        else:
-            # multi-axis production meshes fold on the host (same result:
-            # the merge is associative/commutative either way)
-            fp = fp_shards[0]
-            for shard in fp_shards[1:]:
-                fp.merge(shard)
+        with _ot.span("fingerprint_merge"):
+            if len(axes) == 1:
+                # device-side merge: one ring collective per accumulator
+                fp = merge_fingerprint_shards(mesh, axes[0], fp_shards)
+            else:
+                # multi-axis production meshes fold on the host (same result:
+                # the merge is associative/commutative either way)
+                fp = fp_shards[0]
+                for shard in fp_shards[1:]:
+                    fp.merge(shard)
         sn_ranges = detect_from_fingerprints(
             fp, relax=supernode_relax, max_size=supernode_max_size)
         stats = supernode_stats(sn_ranges)
@@ -277,7 +289,17 @@ def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
         pattern=collector.to_csc() if collector is not None else None,
     )
     res.dist = getattr(ms, "dist", None)       # type: ignore[attr-defined]
+    _record_fill_metrics(res, a)
     return res
+
+
+def _record_fill_metrics(res: SymbolicResult, a: CSRMatrix) -> None:
+    """Device-count-invariant fill gauges (obs registry, DESIGN.md §12)."""
+    if not _ot.ENABLED:
+        return
+    reg = _om.registry()
+    reg.gauge("fill.lu_nnz", res.lu_nnz)
+    reg.gauge("fill.input_nnz", int(a.nnz))
 
 
 def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
@@ -290,7 +312,7 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
                        supernode_relax: int = 0,
                        supernode_max_size: int = 64,
                        collect_pattern: bool = False,
-                       mesh=None) -> SymbolicResult:
+                       mesh=None, on_progress=None) -> SymbolicResult:
     """Compute the L/U nonzero structure of ``a``.
 
     With ``detect_supernodes=True`` the supernode partition rides along for
@@ -336,7 +358,8 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
             detect_supernodes=detect_supernodes,
             supernode_relax=supernode_relax,
             supernode_max_size=supernode_max_size,
-            collect_pattern=collect_pattern, t0=t0)
+            collect_pattern=collect_pattern, t0=t0,
+            on_progress=on_progress)
     eff_c = auto_concurrency(graph, budget_bytes, concurrency, backend)
 
     fp = None
@@ -358,29 +381,34 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         ckpt.restore_into(l_counts, u_counts)
         pending = ckpt.pending_sources()
         supersteps = reinits = n_chunks = 0
-        for start in range(0, len(pending), eff_c):
-            srcs = pending[start:start + eff_c].astype(np.int32)
-            res = run_multisource(graph, concurrency=eff_c, backend=backend,
-                                  combined=combined, bubble=bubble,
-                                  use_arena=use_arena, sources=srcs,
-                                  on_chunk=on_chunk, on_mask=on_mask)
-            l_counts[srcs] = res.l_counts[srcs]
-            u_counts[srcs] = res.u_counts[srcs]
-            supersteps += res.supersteps
-            reinits += res.reinits
-            n_chunks += 1
-            ckpt.record(int(srcs[0]), srcs, res.l_counts[srcs],
-                        res.u_counts[srcs])
+        with _ot.span("fixpoint"):
+            for start in range(0, len(pending), eff_c):
+                srcs = pending[start:start + eff_c].astype(np.int32)
+                res = run_multisource(graph, concurrency=eff_c,
+                                      backend=backend, combined=combined,
+                                      bubble=bubble, use_arena=use_arena,
+                                      sources=srcs, on_chunk=on_chunk,
+                                      on_mask=on_mask)
+                l_counts[srcs] = res.l_counts[srcs]
+                u_counts[srcs] = res.u_counts[srcs]
+                supersteps += res.supersteps
+                reinits += res.reinits
+                n_chunks += 1
+                ckpt.record(int(srcs[0]), srcs, res.l_counts[srcs],
+                            res.u_counts[srcs])
         ms = MultiSourceResult(
             l_counts=l_counts, u_counts=u_counts,
             edge_checks=np.zeros(a.n, np.int64), conv_iters=np.zeros(a.n, np.int64),
             supersteps=supersteps, n_chunks=n_chunks, concurrency=eff_c,
             reinits=reinits, windows=0)
     else:
-        ms = run_multisource(graph, concurrency=eff_c, backend=backend,
-                             combined=combined, bubble=bubble,
-                             use_arena=use_arena, budget_bytes=budget_bytes,
-                             on_chunk=on_chunk, on_mask=on_mask)
+        with _ot.span("fixpoint"):
+            ms = run_multisource(graph, concurrency=eff_c, backend=backend,
+                                 combined=combined, bubble=bubble,
+                                 use_arena=use_arena,
+                                 budget_bytes=budget_bytes,
+                                 on_chunk=on_chunk, on_mask=on_mask,
+                                 on_progress=on_progress)
         if ckpt is not None:
             for start in range(0, a.n, eff_c):
                 srcs = np.arange(start, min(start + eff_c, a.n), dtype=np.int64)
@@ -417,7 +445,7 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
     nnz_offdiag = int(a.nnz) - int(np.count_nonzero(a.indices == row_ids))
     lu_offdiag = int(ms.l_counts.sum() + ms.u_counts.sum())
     fills = lu_offdiag - nnz_offdiag
-    return SymbolicResult(
+    out = SymbolicResult(
         n=a.n, l_counts=ms.l_counts, u_counts=ms.u_counts,
         fill_ratio=fills / max(1, a.nnz),
         concurrency=ms.concurrency, supersteps=ms.supersteps, reinits=ms.reinits,
@@ -427,3 +455,5 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         mean_supernode_size=sn_mean,
         pattern=collector.to_csc() if collector is not None else None,
     )
+    _record_fill_metrics(out, a)
+    return out

@@ -37,6 +37,7 @@ from scipy.linalg import solve_triangular
 
 from repro.numeric.storage import PanelStore
 from repro.numeric.supernodal import NumericResult, numeric_factorize
+from repro.obs import trace as _ot
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import csr_matvec, generic_values_csr
 
@@ -207,14 +208,17 @@ def forward_substitute(store: PanelStore, b: np.ndarray, *,
     y = np.asarray(b, dtype=np.float64).copy()
     if batched is None:
         batched = y.ndim == 2
-    for level in _solve_schedule_of(store).fwd_levels:
-        _level_diag_solves(store, level, y, lower=True, batched=batched)
-        for j in level:                       # ascending: fwd_levels sorted
-            s, e = store.supernodes[j]
-            d = int(store.diag[j])
-            below = store.rows[j][d + (e - s):]
-            if len(below):
-                y[below] -= store.blocks[j][d + (e - s):] @ y[s:e]
+    with _ot.span("solve_forward"):
+        for level in _solve_schedule_of(store).fwd_levels:
+            with _ot.span("fwd_level"):
+                _level_diag_solves(store, level, y, lower=True,
+                                   batched=batched)
+                for j in level:               # ascending: fwd_levels sorted
+                    s, e = store.supernodes[j]
+                    d = int(store.diag[j])
+                    below = store.rows[j][d + (e - s):]
+                    if len(below):
+                        y[below] -= store.blocks[j][d + (e - s):] @ y[s:e]
     return y
 
 
@@ -225,13 +229,16 @@ def backward_substitute(store: PanelStore, y: np.ndarray, *,
     x = np.asarray(y, dtype=np.float64).copy()
     if batched is None:
         batched = x.ndim == 2
-    for level in _solve_schedule_of(store).bwd_levels:
-        _level_diag_solves(store, level, x, lower=False, batched=batched)
-        for j in level:
-            s, e = store.supernodes[j]
-            above = store.rows[j][:store.diag[j]]
-            if len(above):
-                x[above] -= store.blocks[j][:store.diag[j]] @ x[s:e]
+    with _ot.span("solve_backward"):
+        for level in _solve_schedule_of(store).bwd_levels:
+            with _ot.span("bwd_level"):
+                _level_diag_solves(store, level, x, lower=False,
+                                   batched=batched)
+                for j in level:
+                    s, e = store.supernodes[j]
+                    above = store.rows[j][:store.diag[j]]
+                    if len(above):
+                        x[above] -= store.blocks[j][:store.diag[j]] @ x[s:e]
     return x
 
 
@@ -349,26 +356,28 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     b_norms = (np.array([np.linalg.norm(b)]) if b.ndim == 1
                else np.linalg.norm(b, axis=0))
     b_norms = np.where(b_norms == 0.0, 1.0, b_norms)
-    x = solve_factored(num, b, batched=batched)
-    res_cols = _col_residuals(matvec, x, b, b_norms)
-    residuals = [float(res_cols.max())]
-    accepted = 0
-    for _ in range(max(0, refine_iters)):
-        if res_cols.max() <= refine_tol:
-            break
-        r = b - matvec(x)
-        x_try = x + solve_factored(num, r, batched=batched)
-        res_try = _col_residuals(matvec, x_try, b, b_norms)
-        improve = res_try < res_cols
-        if not improve.any():
-            break                      # no column improving — keep best x
-        if x.ndim == 1:
-            x = x_try
-        else:                          # accept only the improving columns
-            x[:, improve] = x_try[:, improve]
-        res_cols = np.where(improve, res_try, res_cols)
-        residuals.append(float(res_cols.max()))
-        accepted += 1
+    with _ot.span("solve"):
+        x = solve_factored(num, b, batched=batched)
+        res_cols = _col_residuals(matvec, x, b, b_norms)
+        residuals = [float(res_cols.max())]
+        accepted = 0
+        for _ in range(max(0, refine_iters)):
+            if res_cols.max() <= refine_tol:
+                break
+            with _ot.span("refine"):
+                r = b - matvec(x)
+                x_try = x + solve_factored(num, r, batched=batched)
+                res_try = _col_residuals(matvec, x_try, b, b_norms)
+                improve = res_try < res_cols
+                if not improve.any():
+                    break              # no column improving — keep best x
+                if x.ndim == 1:
+                    x = x_try
+                else:                  # accept only the improving columns
+                    x[:, improve] = x_try[:, improve]
+                res_cols = np.where(improve, res_try, res_cols)
+                residuals.append(float(res_cols.max()))
+                accepted += 1
     return SolveResult(x=x, residuals=residuals, num=num, factor_s=factor_s,
                        solve_s=time.perf_counter() - t0 - factor_s,
                        refine_accepted=accepted)

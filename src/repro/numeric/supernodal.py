@@ -54,6 +54,8 @@ from scipy.linalg import solve_triangular
 
 from repro.numeric.schedule import PanelSchedule, build_panel_maps, build_schedule
 from repro.numeric.storage import CSCPattern, PanelStore
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import (
     check_pivot, generic_values, generic_values_csr, lu_inplace,
@@ -240,23 +242,26 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     t0 = time.perf_counter()
 
     values = np.asarray(values, dtype=np.float64)
-    if values.ndim == 2:
-        if values.shape != (n, n):
-            raise ValueError(f"values must be ({n}, {n}), got {values.shape}")
-        input_outside = store.set_dense(values)
-    else:
-        if csr_maps is None and a is None:
-            raise ValueError(
-                "CSR-aligned values need the matrix `a` or precomputed "
-                "`csr_maps` to locate their slots")
-        nnz = csr_maps.nnz if csr_maps is not None else a.nnz
-        if values.shape != (nnz,):
-            raise ValueError(
-                f"values must be dense ({n}, {n}) or CSR-aligned ({nnz},), "
-                f"got {values.shape}")
-        input_outside = (
-            store.set_csr_mapped(values, csr_maps, zero=not store_is_zeroed)
-            if csr_maps is not None else store.set_csr(a, values))
+    with _ot.span("scatter_values"):
+        if values.ndim == 2:
+            if values.shape != (n, n):
+                raise ValueError(
+                    f"values must be ({n}, {n}), got {values.shape}")
+            input_outside = store.set_dense(values)
+        else:
+            if csr_maps is None and a is None:
+                raise ValueError(
+                    "CSR-aligned values need the matrix `a` or precomputed "
+                    "`csr_maps` to locate their slots")
+            nnz = csr_maps.nnz if csr_maps is not None else a.nnz
+            if values.shape != (nnz,):
+                raise ValueError(
+                    f"values must be dense ({n}, {n}) or CSR-aligned "
+                    f"({nnz},), got {values.shape}")
+            input_outside = (
+                store.set_csr_mapped(values, csr_maps,
+                                     zero=not store_is_zeroed)
+                if csr_maps is not None else store.set_csr(a, values))
 
     scale = float(np.abs(values).max()) if values.size else 0.0
     if piv_tol is None:
@@ -275,6 +280,12 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     n_updates = 0
     gemm_flops = 0
     dropped_max = input_outside
+    # obs accounting (only touched when tracing is enabled): analytic GEMM
+    # traffic accumulates from shapes the sweep already knows — never a
+    # per-panel timer, so the disabled path and the ratio gates see zero cost
+    obs_on = _ot.ENABLED
+    gemm_bytes = 0
+    sweep_t0 = time.perf_counter() if obs_on else 0.0
     for level in schedule.levels:
         if placement is None or placement.n_devices <= 1:
             segments = ((None, level),)
@@ -282,18 +293,43 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
             segments = tuple(
                 (d, seg) for d, seg in enumerate(placement.segments(level))
                 if len(seg))
-        for d, seg in segments:
-            ctx = (jax.default_device(devices[d])
-                   if devices is not None and d is not None
-                   else contextlib.nullcontext())
-            with ctx:
-                for j in seg:
-                    upd, flops, dropped = _factor_panel(
-                        store, schedule, int(j), piv_tol, backend,
-                        maps=maps[j] if maps is not None else None)
-                    n_updates += upd
-                    gemm_flops += flops
-                    dropped_max = max(dropped_max, dropped)
+        seg_times = [] if obs_on and len(segments) > 1 else None
+        with _ot.span("factor_level"):
+            for d, seg in segments:
+                ctx = (jax.default_device(devices[d])
+                       if devices is not None and d is not None
+                       else contextlib.nullcontext())
+                track = f"device {d}" if d is not None else None
+                seg_t0 = time.perf_counter() if seg_times is not None else 0.0
+                with ctx, _ot.span("factor_segment", track=track):
+                    for j in seg:
+                        upd, flops, dropped = _factor_panel(
+                            store, schedule, int(j), piv_tol, backend,
+                            maps=maps[j] if maps is not None else None)
+                        n_updates += upd
+                        gemm_flops += flops
+                        dropped_max = max(dropped_max, dropped)
+                        if obs_on and flops:
+                            s_, e_ = schedule.supernodes[int(j)]
+                            w_ = int(e_ - s_)
+                            nb = (len(store.rows[int(j)])
+                                  - int(store.diag[int(j)]))
+                            k_ = flops // (2 * nb * w_)
+                            # gathered L panel + solved U rows read, target
+                            # block read + written, all float64
+                            gemm_bytes += 8 * (nb * k_ + k_ * w_ + 2 * nb * w_)
+                if seg_times is not None:
+                    seg_times.append(time.perf_counter() - seg_t0)
+        if seg_times is not None and len(seg_times) > 1:
+            mean_t = sum(seg_times) / len(seg_times)
+            if mean_t > 0:
+                _om.registry().observe("factor.level_imbalance_measured",
+                                       max(seg_times) / mean_t)
+    if obs_on:
+        reg = _om.registry()
+        reg.count("gemm.flops", gemm_flops)
+        reg.count("gemm.bytes", gemm_bytes)
+        reg.count("gemm.seconds", time.perf_counter() - sweep_t0)
 
     outside_max = max(store.padding_max(), dropped_max)
     if check_pattern and outside_max > pattern_tol * scale:

@@ -42,6 +42,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 from repro.supernodes.fingerprint import ColumnFingerprints, mix1, mix2
 
 
@@ -91,7 +93,15 @@ def ranges_from_flags(flags: np.ndarray, *, max_size: int = 64) -> np.ndarray:
 def detect_from_fingerprints(fp: ColumnFingerprints, *, relax: int = 0,
                              max_size: int = 64) -> np.ndarray:
     """Full detection: fingerprint state -> (n_supernodes, 2) ranges."""
-    return ranges_from_flags(merge_flags(fp, relax=relax), max_size=max_size)
+    with _ot.span("supernode_detect"):
+        ranges = ranges_from_flags(merge_flags(fp, relax=relax),
+                                   max_size=max_size)
+        if _ot.ENABLED:
+            reg = _om.registry()
+            reg.gauge("supernodes.count", len(ranges))
+            for w in (ranges[:, 1] - ranges[:, 0]).tolist():
+                reg.observe("supernodes.size", w)
+        return ranges
 
 
 def detect_supernodes_batched(a, *, relax: int = 0, max_size: int = 64,

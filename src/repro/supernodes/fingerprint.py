@@ -26,10 +26,14 @@ event per column pair; detect.py documents the probabilistic contract.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
 
 _GOLDEN = np.uint64(2654435761)          # Knuth multiplicative hash
 _MASK32 = np.uint64(0xFFFFFFFF)
@@ -85,6 +89,21 @@ class ColumnFingerprints:
                 contributes to columns j < s < W, so truncation is lossless).
         srcs:   (G,) source ids of the label rows (repeats allowed — padding).
         """
+        if not _ot.ENABLED:
+            return self._update(labels, srcs, offset)
+        t0 = time.perf_counter()
+        with _ot.span("fingerprint_update"):
+            consumed = self._update(labels, srcs, offset)
+        # analytic traffic of the column reduction: the (consumed, W) int32
+        # label block read once + the three W-wide int32 partials written
+        reg = _om.registry()
+        reg.count("fingerprint.seconds", time.perf_counter() - t0)
+        reg.count("fingerprint.bytes",
+                  4 * consumed * labels.shape[1] + 12 * labels.shape[1])
+        return consumed
+
+    def _update(self, labels: jax.Array, srcs: np.ndarray,
+                offset: int = 0) -> int:
         srcs = np.asarray(srcs, dtype=np.int64)
         w = labels.shape[1]
         # first occurrence within the batch, then drop rows seen earlier
