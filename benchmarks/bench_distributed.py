@@ -1,16 +1,27 @@
-"""Distributed plan pipeline: panel placement quality + real multi-device
-parity (DESIGN.md §11).
+"""Distributed plan pipeline: placement quality, strong scaling, batched
+segments, dynamic runtime, and real multi-device parity (DESIGN.md §11/§13).
 
-Two halves, both feeding one artifact:
+Four sections, all feeding one artifact:
 
-* **placement** (in-process, deterministic): ``analyze`` each matrix once,
-  build the ``pack_panels``-bin placement at 2 and 8 devices, and report
-  the *modeled level-parallel speedup* — total panel weight over the sum
-  of per-level maximum per-device loads (the critical path of a
-  device-parallel level sweep).  These are exact scheduling quantities,
-  machine-portable, and gated against the committed baseline
-  (``run.py --check-baseline``, ratio keys ``*_speedup``).  Every device
-  must receive panel work (enforced here, not just in the baseline).
+* **placement + strong scaling** (in-process, deterministic): ``analyze``
+  each matrix once, build the ``pack_panels``-bin placement over the
+  strong-scaling device counts {1, 2, 4, 8}, and report the *modeled
+  level-parallel speedup* — total panel weight over the sum of per-level
+  maximum per-device loads (the critical path of a device-parallel level
+  sweep).  These are exact scheduling quantities, machine-portable, and
+  gated against the committed baseline (``run.py --check-baseline``,
+  ratio keys ``*_speedup``).  Every device must receive panel work
+  (enforced here, not just in the baseline).
+* **batched segments** (bbd-8k): wall-clock of the same-shape stacked
+  segment GEMMs (``LUOptions.segment_batch``) against per-panel dispatch
+  — the kernel backend must win by >= 1.3x (hard gate; the stack
+  amortizes per-panel launch overhead B-fold).
+* **dynamic runtime** (in-process): ``runtime="dynamic"`` analyze through
+  the work-stealing scheduler + a flat-mesh sharded analyze, both bitwise
+  against the static reference — this is also where the ``runtime`` and
+  ``overlap`` trace phases the ``--trace`` acceptance run validates come
+  from (the double-buffered fixpoint hides host reduction behind the next
+  device step).
 * **multidevice-8** (subprocess under ``XLA_FLAGS=--xla_force_host_
   platform_device_count=8``): the sharded analyze against the mesh-less
   reference — counts, supernodes, pattern, and factors must be
@@ -29,6 +40,7 @@ import os
 import subprocess
 import sys
 import tempfile
+import time
 
 import numpy as np
 
@@ -36,12 +48,17 @@ from benchmarks.common import print_table, save_artifact
 from repro.api import LUOptions, analyze
 from repro.numeric.schedule import build_placement
 from repro.sparse import (
-    bordered_block_diagonal, grid2d_laplacian, permute_csr, rcm_order,
+    bordered_block_diagonal, circuit_like, grid2d_laplacian, permute_csr,
+    rcm_order,
 )
 from repro.sparse.numeric import generic_values_csr
 from repro.supernodes.balance import supernode_weights
 
 DEVICE_COUNTS = (2, 8)
+# strong-scaling sweep of the modeled level-parallel speedup: D=1 anchors
+# the curve at 1.0, the rest show how far the structure's level widths
+# carry before the per-level critical path flattens the curve
+SCALING_COUNTS = (1, 2, 4, 8)
 
 # grid2d is the honest control: an RCM-ordered stencil condenses to a
 # serial supernode chain (max level width 1), so its placement speedup is
@@ -155,6 +172,93 @@ def _measured_imbalance(plan, a, n_devices: int = 8) -> dict:
     }
 
 
+def _batched_segment_case(plan, a, *, repeats: int = 3,
+                          min_speedup: float = 1.3) -> dict:
+    """Wall-clock of the same-shape batched segment GEMMs
+    (``LUOptions.segment_batch``, DESIGN.md §13) against per-panel
+    dispatch: best-of-N factorize each way on the same plan.  The batched
+    path folds every same-shape panel of a segment into ONE kernel launch,
+    amortizing per-panel dispatch overhead B-fold on the Pallas backend —
+    so the kernel-backend ratio must clear ``min_speedup`` (hard gate, and
+    the ``*_speedup`` keys are floor-gated against the committed
+    baseline).  The numpy-backend ratio (stacked ``np.matmul`` vs
+    per-panel BLAS calls) is reported alongside as an ungated ratio —
+    BLAS calls carry far less launch overhead than interpret-mode Pallas,
+    so the win there is small and noisy on a shared CPU."""
+    values = generic_values_csr(a)
+    prev = plan.options
+    times = {}
+    try:
+        for backend in ("kernel", "numpy"):
+            for sb in (True, False):
+                plan.options = prev.replace(numeric_backend=backend,
+                                            segment_batch=sb)
+                best = float("inf")
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    plan.factorize(values)
+                    best = min(best, time.perf_counter() - t0)
+                times[(backend, sb)] = best
+    finally:
+        plan.options = prev
+    speedup = times[("kernel", False)] / times[("kernel", True)]
+    if speedup < min_speedup:
+        raise RuntimeError(
+            f"batched segment GEMMs won only {speedup:.2f}x over per-panel "
+            f"dispatch on the kernel backend — below the {min_speedup:.1f}x "
+            f"floor; the stacked dispatch is not amortizing launches")
+    return {
+        "batched_segment_speedup": speedup,
+        "batched_numpy_ratio":
+            times[("numpy", False)] / times[("numpy", True)],
+        "t_factor_batched_s": times[("kernel", True)],
+        "t_factor_perpanel_s": times[("kernel", False)],
+    }
+
+
+def _runtime_case() -> dict:
+    """Dynamic-runtime analyze (work-stealing scheduler) + flat-mesh
+    sharded analyze, both in-process and both bitwise against the static
+    reference.  Under ``--trace`` this is what puts the ``runtime`` span
+    (scheduler drain loop) and the ``overlap`` span (double-buffered host
+    reduction hidden behind the next device step) into the suite's trace —
+    ``run.py --validate-traces`` requires both phases."""
+    from repro.core.symbolic import symbolic_factorize
+    from repro.launch.mesh import make_flat_mesh
+
+    a = circuit_like(512, seed=7)
+    a = permute_csr(a, rcm_order(a))
+    kw = dict(concurrency=64, detect_supernodes=True, supernode_relax=2,
+              collect_pattern=True)
+    ref = symbolic_factorize(a, **kw)
+
+    t0 = time.perf_counter()
+    dyn = symbolic_factorize(a, runtime="dynamic", **kw)
+    t_dyn = time.perf_counter() - t0
+    if not (np.array_equal(ref.l_counts, dyn.l_counts)
+            and np.array_equal(ref.u_counts, dyn.u_counts)
+            and np.array_equal(ref.supernodes, dyn.supernodes)):
+        raise RuntimeError(
+            "dynamic-runtime analyze diverged from the static reference — "
+            "the bitwise conformance contract is broken")
+
+    dist = symbolic_factorize(a, mesh=make_flat_mesh(), **kw)
+    if not (np.array_equal(ref.l_counts, dist.l_counts)
+            and np.array_equal(ref.u_counts, dist.u_counts)):
+        raise RuntimeError(
+            "sharded analyze diverged from the static reference — the "
+            "bitwise conformance contract is broken")
+    return {
+        "n": a.n,
+        "chunks": dyn.runtime["chunks"],
+        "completed": dyn.runtime["completed"],
+        "steals": dyn.runtime["steals"],
+        "reissues": dyn.runtime["reissues"],
+        "t_analyze_dynamic_s": t_dyn,
+        "overlap_hidden_s": float(dist.dist.get("overlap_hidden_s", 0.0)),
+    }
+
+
 def _multidevice_case() -> dict:
     with tempfile.TemporaryDirectory() as d:
         script = os.path.join(d, "bench_dist_sub.py")
@@ -184,7 +288,7 @@ def run() -> dict:
         max_width = max(len(lv) for lv in plan.schedule.levels)
         rec = {"n": a.n, "nnz": a.nnz, "n_panels": plan.n_supernodes,
                "n_levels": plan.n_levels, "max_level_width": max_width}
-        for d in DEVICE_COUNTS:
+        for d in sorted(set(DEVICE_COUNTS) | set(SCALING_COUNTS)):
             m = modeled_level_speedup(plan, d)
             # per-level LPT fills min(devices, level width) bins, so the
             # widest level bounds reachable coverage — anything less means
@@ -194,19 +298,32 @@ def run() -> dict:
                     f"{name}: placement left devices idle at D={d} "
                     f"({m['devices_used']} of {min(d, max_width)} "
                     f"reachable)")
-            rec[f"placement{d}_speedup"] = m["speedup"]
-            rec[f"devices_used_d{d}"] = m["devices_used"]
+            rec[f"scaling{d}_speedup"] = m["speedup"]
+            if d in DEVICE_COUNTS:
+                rec[f"placement{d}_speedup"] = m["speedup"]
+                rec[f"devices_used_d{d}"] = m["devices_used"]
         results[name] = rec
         rows.append([name, a.n, plan.n_supernodes, plan.n_levels,
-                     f"{rec['placement2_speedup']:.2f}x",
-                     f"{rec['placement8_speedup']:.2f}x"])
+                     " ".join(f"{rec[f'scaling{d}_speedup']:.2f}x"
+                              for d in SCALING_COUNTS)])
         if name == "bbd-8k":                   # measured, not only modeled
             mi = _measured_imbalance(plan, a)
             rec["measured_imbalance"] = mi
             rows.append(["bbd-8k measured (D=8)", a.n, "-",
                          mi["levels_measured"],
-                         f"imb mean {mi['imbalance_mean']:.2f}",
+                         f"imb mean {mi['imbalance_mean']:.2f} "
                          f"max {mi['imbalance_max']:.2f}"])
+            bs = _batched_segment_case(plan, a)
+            rec["batched_segments"] = bs
+            rows.append(["bbd-8k batched segments", a.n, "-", "-",
+                         f"kernel {bs['batched_segment_speedup']:.2f}x "
+                         f"numpy {bs['batched_numpy_ratio']:.2f}x"])
+
+    rt = _runtime_case()
+    results["runtime-dynamic"] = rt
+    rows.append(["runtime-dynamic (circuit-512)", rt["n"], "-", "-",
+                 f"chunks {rt['completed']}/{rt['chunks']} "
+                 f"steals {rt['steals']} reissues {rt['reissues']}"])
 
     md = _multidevice_case()
     if not md["parity"]:
@@ -216,11 +333,12 @@ def run() -> dict:
             "is broken")
     results["multidevice-8"] = md
     rows.append(["multidevice-8 (real)", md["n"], "-", "-",
-                 f"balance {md['balance_ratio']:.2f}",
+                 f"balance {md['balance_ratio']:.2f} "
                  f"parity {'OK' if md['parity'] else 'BROKEN'}"])
 
-    print_table("Distributed plan: placement + 8-device parity",
-                ["matrix", "|V|", "panels", "levels", "D=2", "D=8"], rows)
+    print_table("Distributed plan: scaling + runtime + 8-device parity",
+                ["matrix", "|V|", "panels", "levels",
+                 "scaling D=" + "/".join(map(str, SCALING_COUNTS))], rows)
     save_artifact("bench_distributed", results)
     return results
 

@@ -61,7 +61,8 @@ REQUIRED_PHASES = {
     "refactorize": ["analyze", "factorize", "factor_level",
                     "solve_forward"],
     "distributed": ["analyze", "placement", "factorize", "factor_level",
-                    "factor_segment", "solve_forward", "solve_backward"],
+                    "factor_segment", "solve_forward", "solve_backward",
+                    "runtime", "overlap"],
     "roofline": [],
 }
 

@@ -77,6 +77,7 @@ from repro.sparse.numeric import generic_values_csr
 _SYMBOLIC_BACKENDS = ("ell", "dense", "kernel")
 _NUMERIC_BACKENDS = ("numpy", "kernel")
 _POLICIES = ("lpt", "contiguous")
+_RUNTIMES = ("static", "dynamic")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,11 +126,19 @@ class LUOptions:
     piv_tol: Optional[float] = None
     check_pattern: bool = True
     pattern_tol: Optional[float] = None
+    # batch same-shape panels of a (level, device) segment into one stacked
+    # GEMM dispatch (DESIGN.md §13) — bitwise-identical to per-panel
+    # dispatch; off restores the one-GEMM-per-panel sweep
+    segment_batch: bool = True
     # -- solve / refinement
     refine_iters: int = 2
     refine_tol: Optional[float] = None
     # -- distribution (DESIGN.md §11)
     distribute: bool = False
+    # -- execution runtime (DESIGN.md §13): "static" = fixed chunk loop;
+    # "dynamic" = work-stealing DynamicScheduler over the visible devices
+    # (straggler re-issue, elastic join/leave), bitwise-identical outputs
+    runtime: str = "static"
     # -- observability (DESIGN.md §12): record phase spans + counters for
     # this plan's analyze/factorize calls (repro.obs); plans/factors gain a
     # ``stats`` summary tree.  Off by default — the disabled path is a
@@ -147,6 +156,14 @@ class LUOptions:
         if self.policy not in _POLICIES:
             raise ValueError(f"unknown packing policy {self.policy!r}; "
                              f"pick from {_POLICIES}")
+        if self.runtime not in _RUNTIMES:
+            raise ValueError(f"unknown runtime {self.runtime!r}; "
+                             f"pick from {_RUNTIMES}")
+        if self.runtime == "dynamic" and self.distribute:
+            raise ValueError(
+                "runtime='dynamic' is the host-driven scheduler over the "
+                "visible devices and cannot be combined with "
+                "distribute=True (the shard_map mesh) — drop one")
 
     def replace(self, **changes) -> "LUOptions":
         """A copy with ``changes`` applied (frozen-dataclass convenience)."""
@@ -264,6 +281,31 @@ class LUPlan:
     def n_levels(self) -> int:
         return self.schedule.n_levels
 
+    def place(self, n_devices: Optional[int] = None, *,
+              policy: str = "lpt") -> "LUPlan":
+        """Re-derive the panel placement for ``n_devices`` (DESIGN.md §13).
+
+        Placement is a *derived* property of the schedule, not a frozen
+        analyze-time fact: re-binning every dependency level's panels via
+        ``numeric.schedule.build_placement`` adapts a pickled plan to
+        whatever mesh exists where it is loaded — a plan analyzed at D=8
+        runs on 1, 2, or 200 devices.  ``n_devices=None`` takes the
+        visible device count (``launch.mesh.visible_device_count``).
+        Within a level panels are independent, so placement changes
+        scheduling only — factors and solutions stay bitwise-identical at
+        every count.  Returns ``self`` (placement is replaced in place) so
+        ``pickle.load(f).place().factorize(v)`` chains.
+        """
+        if n_devices is None:
+            from repro.launch.mesh import visible_device_count
+
+            n_devices = visible_device_count()
+        from repro.launch.mesh import FLAT_AXIS
+
+        self.placement = build_placement(self.schedule, n_devices,
+                                         axis=FLAT_AXIS, policy=policy)
+        return self
+
     def factorize(self, values: Optional[np.ndarray] = None, *,
                   _reuse_store: Optional[PanelStore] = None
                   ) -> LUFactorization:
@@ -289,7 +331,8 @@ class LUPlan:
                     pattern_tol=self.options.pattern_tol,
                     maps=self.gather_maps, csr_maps=self.csr_maps,
                     store_is_zeroed=_reuse_store is None,
-                    placement=self.placement)
+                    placement=self.placement,
+                    segment_batch=self.options.segment_batch)
             stats = tr.summary(mark) if tr is not None else None
         return LUFactorization(plan=self, num=num,
                                values=np.asarray(values, dtype=np.float64),
@@ -345,7 +388,8 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
                 detect_supernodes=True,
                 supernode_relax=opts.supernode_relax,
                 supernode_max_size=opts.supernode_max_size,
-                collect_pattern=True, mesh=mesh, on_progress=on_progress)
+                collect_pattern=True, mesh=mesh, runtime=opts.runtime,
+                on_progress=on_progress)
             pattern = sym.pattern
             with _ot.span("build_schedule"):
                 schedule = build_schedule(pattern, sym.supernodes,
@@ -362,6 +406,15 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
                 n_devices = int(np.prod(list(mesh.shape.values())))
                 placement = build_placement(schedule, n_devices,
                                             axis=mesh.axis_names[0])
+            elif opts.runtime == "dynamic":
+                # the dynamic runtime drove every visible device through
+                # the analyze; give factorize/solve the matching per-device
+                # segments (re-derivable later at any count via ``place``)
+                from repro.launch.mesh import FLAT_AXIS, visible_device_count
+
+                placement = build_placement(schedule,
+                                            visible_device_count(),
+                                            axis=FLAT_AXIS)
         stats = tr.summary(mark) if tr is not None else None
     return LUPlan(a=a, options=opts, sym=sym, pattern=pattern,
                   schedule=schedule, store_template=store_template,

@@ -30,6 +30,7 @@ through this driver, which is how ``repro.analyze`` distributes.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -221,6 +222,39 @@ def make_distributed_chunk_step(mesh: Mesh, graph_n: int, *,
                        shardings[spec_src], NamedSharding(mesh, P(axes))))
 
 
+def make_chunk_step(graph_n: int, *, backend: str = "ell",
+                    max_iters: Optional[int] = None):
+    """Jitted *single-device* chunk step — the mesh-less sibling of
+    ``make_distributed_chunk_step``, and the closure the dynamic
+    work-stealing scheduler (``runtime.scheduler``) launches per device.
+
+    In: (C,) int32 sources + the (replicated) graph.  Out: converged
+    (C, n) labels, (C, n) bool fill masks, (C,) l/u counts and edge
+    checks, and the chunk's superstep count — exactly the streams the
+    fingerprint/pattern collectors consume, so a host-driven scheduler
+    can feed ``repro.analyze`` the same data the static drivers do.
+
+    Dispatch is async: the returned callable hands back device arrays
+    immediately; poll ``.is_ready()`` (or block via ``np.asarray``) on
+    the outputs.  Per-source fixpoints are unique and chunking- and
+    device-independent, so results are bitwise-identical no matter which
+    device runs which chunk, in what order, or how many times.
+    """
+    if max_iters is None:
+        max_iters = graph_n + 2
+
+    @jax.jit
+    def step(srcs, graph):
+        labels0 = init_labels(graph, srcs)
+        res = fixpoint_impl(graph, srcs, labels0, jnp.int32(0), backend,
+                            max_iters)
+        mask = fill_masks(res.labels, srcs)
+        l_cnt, u_cnt = row_counts(res.labels, srcs)
+        return res.labels, mask, l_cnt, u_cnt, res.edge_checks, res.iters
+
+    return step
+
+
 def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
                             concurrency: int = 128, backend: str = "ell",
                             policy: str = "interleave",
@@ -244,6 +278,15 @@ def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
     ``on_progress(done, total, eta_s)`` (optional) fires after every
     sharded chunk step with a rolling-rate ETA — the same callback shape
     ``run_multisource`` takes, surfaced as ``analyze(on_progress=...)``.
+
+    The loop is **double-buffered**: step k+1 is dispatched (JAX dispatch
+    is async) before chunk k's host reduction runs, so fingerprint/pattern
+    accumulation hides behind the next device step.  Chunks are reduced
+    strictly in submission order, so delivery — and therefore every output
+    — is bitwise-identical to the synchronous loop; the hidden reduction
+    wall-time is reported as ``result.dist["overlap_hidden_s"]`` and the
+    ``overlap.hidden_s`` counter (an ``overlap`` span wraps each hidden
+    reduction when tracing).
 
     Returns a ``core.multisource.MultiSourceResult`` plus a ``stats`` dict
     (per-device edge checks, balance ratio) attached as ``result.dist``.
@@ -270,46 +313,72 @@ def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
 
     total_steps = -(-per // concurrency)
     meter = _om.ProgressMeter(on_progress) if on_progress is not None else None
-    for start in range(0, per, concurrency):
-        with _ot.span("fixpoint_chunk"):
-            cols = srcs_mat[:, start:start + concurrency]
-            own = owned[:, start:start + concurrency]
-            if cols.shape[1] < concurrency:
-                # fixed step shape: pad by repeating each shard's last column
-                # (duplicate sources are idempotent and never owned twice)
-                short = concurrency - cols.shape[1]
-                cols = np.concatenate(
-                    [cols, np.repeat(cols[:, -1:], short, axis=1)], axis=1)
-                own = np.concatenate(
-                    [own, np.zeros((n_shards, short), dtype=bool)], axis=1)
-            labels, mask, l_cnt, u_cnt, edges, iters = step(
-                jnp.asarray(cols), graph)
-            labels = np.asarray(labels)
-            mask = np.asarray(mask)
-            l_cnt, u_cnt = np.asarray(l_cnt), np.asarray(u_cnt)
-            edges = np.asarray(edges)
-            with _ot.span("host_reduce"):
-                for d in range(n_shards):
-                    keep = own[d]
-                    srcs_d = cols[d][keep]
-                    l_counts[srcs_d] = l_cnt[d][keep]
-                    u_counts[srcs_d] = u_cnt[d][keep]
-                    edge_checks[srcs_d] = edges[d][keep]
-                    per_dev_edges[d] += int(edges[d][keep].sum())
-                    if on_shard_chunk is not None and keep.any():
-                        on_shard_chunk(d, labels[d][keep], srcs_d)
-                    if on_shard_mask is not None:
-                        on_shard_mask(d, mask[d], cols[d])
-            # per-shard while_loop trip counts differ by design; the step's
-            # wall-clock is the slowest shard's count
-            supersteps += int(np.asarray(iters).max())
-            n_chunks += 1
-            if _ot.ENABLED:
-                _om.registry().observe("fixpoint.iterations",
-                                       int(np.asarray(iters).max()))
-                _om.registry().count("fixpoint.chunks")
+
+    def _inputs(start):
+        cols = srcs_mat[:, start:start + concurrency]
+        own = owned[:, start:start + concurrency]
+        if cols.shape[1] < concurrency:
+            # fixed step shape: pad by repeating each shard's last column
+            # (duplicate sources are idempotent and never owned twice)
+            short = concurrency - cols.shape[1]
+            cols = np.concatenate(
+                [cols, np.repeat(cols[:, -1:], short, axis=1)], axis=1)
+            own = np.concatenate(
+                [own, np.zeros((n_shards, short), dtype=bool)], axis=1)
+        return cols, own
+
+    def _reduce(cols, own, outs):
+        nonlocal supersteps, n_chunks
+        labels, mask, l_cnt, u_cnt, edges, iters = outs
+        labels = np.asarray(labels)
+        mask = np.asarray(mask)
+        l_cnt, u_cnt = np.asarray(l_cnt), np.asarray(u_cnt)
+        edges = np.asarray(edges)
+        with _ot.span("host_reduce"):
+            for d in range(n_shards):
+                keep = own[d]
+                srcs_d = cols[d][keep]
+                l_counts[srcs_d] = l_cnt[d][keep]
+                u_counts[srcs_d] = u_cnt[d][keep]
+                edge_checks[srcs_d] = edges[d][keep]
+                per_dev_edges[d] += int(edges[d][keep].sum())
+                if on_shard_chunk is not None and keep.any():
+                    on_shard_chunk(d, labels[d][keep], srcs_d)
+                if on_shard_mask is not None:
+                    on_shard_mask(d, mask[d], cols[d])
+        # per-shard while_loop trip counts differ by design; the step's
+        # wall-clock is the slowest shard's count
+        supersteps += int(np.asarray(iters).max())
+        n_chunks += 1
+        if _ot.ENABLED:
+            _om.registry().observe("fixpoint.iterations",
+                                   int(np.asarray(iters).max()))
+            _om.registry().count("fixpoint.chunks")
         if meter is not None:
             meter.update(n_chunks, total_steps)
+
+    # double-buffered fixpoint: dispatch step k+1 (async JAX dispatch keeps
+    # the devices busy) *before* consuming step k's outputs, so the host-side
+    # fingerprint/pattern reduction of chunk k overlaps the device compute of
+    # chunk k+1.  Chunks are still reduced strictly in order, so every
+    # collector sees the exact same delivery sequence as the synchronous loop
+    # — the bitwise conformance contract is untouched.
+    pending = None
+    overlap_hidden = 0.0
+    for start in range(0, per, concurrency):
+        with _ot.span("fixpoint_chunk"):
+            cols, own = _inputs(start)
+            outs = step(jnp.asarray(cols), graph)
+        if pending is not None:
+            t0 = time.perf_counter()
+            with _ot.span("overlap"):
+                _reduce(*pending)
+            overlap_hidden += time.perf_counter() - t0
+        pending = (cols, own, outs)
+    if pending is not None:
+        _reduce(*pending)       # the last chunk has nothing left to hide it
+    if _ot.ENABLED:
+        _om.registry().count("overlap.hidden_s", overlap_hidden)
 
     result = MultiSourceResult(
         l_counts=l_counts, u_counts=u_counts, edge_checks=edge_checks,
@@ -322,5 +391,6 @@ def distributed_multisource(graph: SymbolicGraph, mesh: Mesh, *,
         "per_device_edge_checks": per_dev_edges,
         "balance_ratio": balance,
         "policy": policy,
+        "overlap_hidden_s": overlap_hidden,
     }
     return result

@@ -312,7 +312,8 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
                        supernode_relax: int = 0,
                        supernode_max_size: int = 64,
                        collect_pattern: bool = False,
-                       mesh=None, on_progress=None) -> SymbolicResult:
+                       mesh=None, runtime: str = "static",
+                       on_progress=None) -> SymbolicResult:
     """Compute the L/U nonzero structure of ``a``.
 
     With ``detect_supernodes=True`` the supernode partition rides along for
@@ -338,12 +339,31 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
     runs combined chunks; ``bubble`` and ``checkpoint_path`` are
     single-device refinements and raise here, while ``use_arena`` is
     simply ignored (no label-arena windows inside shard_map).
+
+    ``runtime="dynamic"`` routes the fixpoint through the work-stealing
+    ``runtime.scheduler.DynamicScheduler`` instead of the static chunk
+    loop (DESIGN.md §13): every visible device pulls chunks from a shared
+    queue, stragglers are speculatively re-issued, and devices may
+    join/leave mid-run — while the converged label matrices and fill
+    masks stream into the *same* fingerprint/pattern collectors, so every
+    output stays bitwise-identical to the static drivers.
+    ``checkpoint_path`` composes with it (the scheduler skips covered
+    chunks on restart); ``mesh`` and ``bubble`` do not (the scheduler
+    *is* the distribution — one host driving the device pool).
     """
     t0 = time.perf_counter()
+    if runtime not in ("static", "dynamic"):
+        raise ValueError(f"unknown runtime {runtime!r}; pick from "
+                         f"('static', 'dynamic')")
     if graph is None:
         dense_block = 128 if backend in ("dense", "kernel") else None
         graph = prepare_graph(a, dense_block=dense_block)
     if mesh is not None:
+        if runtime == "dynamic":
+            raise ValueError(
+                "runtime='dynamic' is the host-driven scheduler over the "
+                "visible devices and cannot be combined with a shard_map "
+                "mesh — drop one of the two")
         if checkpoint_path is not None:
             raise ValueError(
                 "checkpoint_path is a single-device refinement; the "
@@ -373,7 +393,32 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
     on_mask = collector.update if collector is not None else None
 
     ckpt = ChunkCheckpointer(checkpoint_path, a.n) if checkpoint_path else None
-    if ckpt is not None and ckpt.covered.any():
+    runtime_stats = None
+    if runtime == "dynamic":
+        if bubble:
+            raise ValueError("bubble removal is not supported on the "
+                             "dynamic runtime (chunks are full-width)")
+        from repro.runtime.scheduler import DynamicScheduler
+
+        sched = DynamicScheduler(graph, concurrency=eff_c, backend=backend,
+                                 checkpointer=ckpt, on_chunk=on_chunk,
+                                 on_mask=on_mask)
+        with _ot.span("fixpoint"):
+            out = sched.run()
+        ms = MultiSourceResult(
+            l_counts=out["l_counts"], u_counts=out["u_counts"],
+            edge_checks=out["edge_checks"],
+            conv_iters=np.zeros(a.n, np.int64),
+            supersteps=out["supersteps"], n_chunks=out["completed"],
+            concurrency=eff_c, reinits=out["completed"],
+            windows=out["completed"])
+        runtime_stats = {
+            "n_devices": len(sched.devices),
+            "chunks": out["chunks"], "completed": out["completed"],
+            "steals": out["steals"], "reissues": out["reissues"],
+            "retired": out["retired"],
+        }
+    elif ckpt is not None and ckpt.covered.any():
         # restart path: only run the uncovered sources, re-chunked on THIS
         # run's grid (the recording run may have used a different concurrency)
         l_counts = np.zeros(a.n, dtype=np.int64)
@@ -455,5 +500,7 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         mean_supernode_size=sn_mean,
         pattern=collector.to_csc() if collector is not None else None,
     )
+    if runtime_stats is not None:
+        out.runtime = runtime_stats            # type: ignore[attr-defined]
     _record_fill_metrics(out, a)
     return out

@@ -123,6 +123,38 @@ def panel_update_ref(acc, l_panel, u_panel):
                                  jnp.asarray(u_panel, jnp.float32))
 
 
+def panel_update_batched(acc: jax.Array, l_panel: jax.Array,
+                         u_panel: jax.Array, *, block_m: int = 128,
+                         block_n: int = 128, block_k: int = 128,
+                         interpret: bool | None = None) -> jax.Array:
+    """(B, M, N) stacked supernodal panel updates in ONE kernel launch; see
+    ``panel_update_batched_pallas``.  Pads the trailing dims with the exact
+    block sizes the per-panel ``panel_update`` wrapper would pick for
+    (M, N, K), so every slice is bitwise-identical to its own per-panel
+    dispatch — the batched segment sweep's conformance contract."""
+    from repro.kernels.panel_update import panel_update_batched_pallas
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    acc = jnp.asarray(acc, jnp.float32)
+    l_panel = jnp.asarray(l_panel, jnp.float32)
+    u_panel = jnp.asarray(u_panel, jnp.float32)
+    b, m, n = acc.shape
+    k = l_panel.shape[2]
+    if b == 0 or m == 0 or n == 0 or k == 0:
+        return acc
+    block_m = min(block_m, max(8, ((m + 7) // 8) * 8))
+    block_n = min(block_n, max(128, ((n + 127) // 128) * 128))
+    block_k = min(block_k, max(128, ((k + 127) // 128) * 128))
+    acc_p = _pad_to(_pad_to(acc, 1, block_m, 0.0), 2, block_n, 0.0)
+    l_p = _pad_to(_pad_to(l_panel, 1, block_m, 0.0), 2, block_k, 0.0)
+    u_p = _pad_to(_pad_to(u_panel, 1, block_k, 0.0), 2, block_n, 0.0)
+    out = panel_update_batched_pallas(acc_p, l_p, u_p, block_m=block_m,
+                                      block_n=block_n, block_k=block_k,
+                                      interpret=interpret)
+    return out[:, :m, :n]
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, scale: float | None = None,
                     block_q: int = 128, block_k: int = 128,

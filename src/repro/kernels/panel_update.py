@@ -78,3 +78,30 @@ def panel_update_pallas(acc: jax.Array, l_panel: jax.Array, u_panel: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(acc, l_panel, u_panel)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def panel_update_batched_pallas(acc: jax.Array, l_panel: jax.Array,
+                                u_panel: jax.Array, *, block_m: int = 128,
+                                block_n: int = 128, block_k: int = 128,
+                                interpret: bool = True) -> jax.Array:
+    """(B, M, N) float32 stacked panel updates ``acc - l_panel @ u_panel``.
+
+    The batched segment sweep (``numeric/supernodal.py``, DESIGN.md §13)
+    groups every same-shape panel of a (level, device) segment into one
+    stack and dispatches it here: one vmapped ``pallas_call`` whose batch
+    axis becomes a leading grid dimension, so B panels cost one kernel
+    launch instead of B.  Each slice runs the exact grid the per-panel
+    kernel would (same blocks, same K-accumulation order), so results are
+    bitwise-identical to B separate ``panel_update_pallas`` calls.
+    """
+    b, m, n = acc.shape
+    k = l_panel.shape[2]
+    assert l_panel.shape == (b, m, k) and u_panel.shape == (b, k, n), (
+        acc.shape, l_panel.shape, u_panel.shape)
+    f = functools.partial(panel_update_pallas, block_m=block_m,
+                          block_n=block_n, block_k=block_k,
+                          interpret=interpret)
+    return jax.vmap(f)(acc, l_panel, u_panel)

@@ -59,6 +59,14 @@ def make_host_mesh(model: int = 1) -> Mesh:
 FLAT_AXIS = "shards"
 
 
+def visible_device_count() -> int:
+    """Number of devices jax sees right now — what ``LUPlan.place()`` and
+    the dynamic runtime default to.  A function, not a constant: forced
+    host-device flags and real accelerator counts are both decided at jax
+    init, per process."""
+    return len(jax.devices())
+
+
 def make_flat_mesh(n_devices: int | None = None) -> Mesh:
     """One-axis ``(shards,)`` mesh — the distributed analyze/factorize
     substrate (DESIGN.md §11): GSoFa shards *sources* (and the plan shards

@@ -134,10 +134,83 @@ def _solve_upper_right(block: np.ndarray, rhs: np.ndarray) -> np.ndarray:
                             check_finite=False).T
 
 
+def _panel_prepare(store: PanelStore, schedule: PanelSchedule, j: int,
+                   maps=None):
+    """Phase A of panel j: per-ancestor solves + U-row scatter.
+
+    Runs the ascending per-ancestor unit-lower solves and rank updates on
+    the gathered target rows, writes the solved U(anc, J) rows back into
+    the packed block, and assembles the trailing-GEMM operands.  Reads only
+    strictly-earlier-level blocks, so phase A of every panel in a level can
+    run before any same-level GEMM/finish — the batched segment sweep's
+    legality contract.
+
+    Returns (lp, b, dropped, flops): the gathered (M, K) ancestor L panel
+    and solved (K, w) U rows — the trailing-GEMM operands — plus the
+    largest |value| the solves produced on a row absent from the panel's
+    structure and the analytic GEMM flop count.  ``(None, None, 0.0, 0)``
+    when the panel has no ancestors.
+    """
+    s, e = schedule.supernodes[j]
+    w = e - s
+    anc = schedule.ancestors[j]
+    block = store.blocks[j]
+    d = int(store.diag[j])
+    if not len(anc):
+        return None, None, 0.0, 0
+    if maps is None:
+        maps = build_panel_maps(store, schedule, j)
+    offs = maps.offs
+    anc_rows = maps.anc_rows
+
+    # ascending per-ancestor solves + rank-|K| updates on the gathered
+    # target rows; each ancestor's L strip (its own diagonal block + the
+    # later ancestor rows) is gathered through the row-index maps only
+    # while in use, so working memory stays O(K * max_w) — never a dense
+    # (K, K) ancestor sub-matrix (rows absent from a panel's structure
+    # gather as exact zeros)
+    b = store.gather_rows_mapped(j, maps.idx_j, maps.hit_j)  # (K, w)
+    for idx, k in enumerate(anc):
+        r0, r1 = offs[idx], offs[idx + 1]
+        strip = store.gather_rows_mapped(int(k), *maps.strip_maps[idx])
+        b[r0:r1] = _solve_unit_lower(strip[:r1 - r0], b[r0:r1])
+        if r1 < len(anc_rows):
+            b[r1:] -= strip[r1 - r0:] @ b[r0:r1]
+    idx_j, hit_j = maps.idx_j, maps.hit_j         # solved U(anc, J)
+    block[idx_j[hit_j]] = b[hit_j]
+    dropped = 0.0
+    if not hit_j.all():
+        miss = np.abs(b[~hit_j])
+        if miss.size:
+            dropped = float(miss.max())
+
+    # trailing-GEMM operands: the gathered ancestor L panels against the
+    # solved U rows, targeting the packed block rows >= s
+    below = store.rows[j][d:]
+    lp = np.empty((len(below), len(anc_rows)), dtype=np.float64)
+    for idx, k in enumerate(anc):
+        lp[:, offs[idx]:offs[idx + 1]] = store.gather_rows_mapped(
+            int(k), *maps.below_maps[idx])
+    flops = 2 * len(below) * len(anc_rows) * w
+    return lp, b, dropped, flops
+
+
+def _panel_finish(store: PanelStore, schedule: PanelSchedule, j: int,
+                  piv_tol: float) -> None:
+    """Phase B of panel j: diagonal-block factor + below-panel solve."""
+    s, e = schedule.supernodes[j]
+    w = e - s
+    block = store.blocks[j]
+    d = int(store.diag[j])
+    lu_inplace(block[d:d + w], piv_tol, col0=s)
+    if block.shape[0] > d + w:
+        block[d + w:] = _solve_upper_right(block[d:d + w], block[d + w:])
+
+
 def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
                   piv_tol: float, backend: str,
                   maps=None) -> Tuple[int, int, float]:
-    """Factor panel j in place on its packed block.
+    """Factor panel j in place on its packed block (per-panel dispatch).
 
     ``maps`` (a ``schedule.PanelMaps``) supplies the panel's precomputed
     row-index gather/scatter maps — the plan/factor API builds them once per
@@ -149,48 +222,13 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
     produced on a row absent from the panel's structure — nonzero beyond
     roundoff means symbolic under-prediction).
     """
-    s, e = schedule.supernodes[j]
-    w = e - s
-    anc = schedule.ancestors[j]
-    block = store.blocks[j]
-    d = int(store.diag[j])
-    flops = 0
-    dropped = 0.0
-
-    if len(anc):
-        if maps is None:
-            maps = build_panel_maps(store, schedule, j)
-        offs = maps.offs
-        anc_rows = maps.anc_rows
-
-        # 1. ascending per-ancestor solves + rank-|K| updates on the gathered
-        #    target rows; each ancestor's L strip (its own diagonal block +
-        #    the later ancestor rows) is gathered through the row-index maps
-        #    only while in use, so working memory stays O(K * max_w) — never
-        #    a dense (K, K) ancestor sub-matrix (rows absent from a panel's
-        #    structure gather as exact zeros)
-        b = store.gather_rows_mapped(j, maps.idx_j, maps.hit_j)  # (K, w)
-        for idx, k in enumerate(anc):
-            r0, r1 = offs[idx], offs[idx + 1]
-            strip = store.gather_rows_mapped(int(k), *maps.strip_maps[idx])
-            b[r0:r1] = _solve_unit_lower(strip[:r1 - r0], b[r0:r1])
-            if r1 < len(anc_rows):
-                b[r1:] -= strip[r1 - r0:] @ b[r0:r1]
-        idx_j, hit_j = maps.idx_j, maps.hit_j         # solved U(anc, J)
-        block[idx_j[hit_j]] = b[hit_j]
-        if not hit_j.all():
-            miss = np.abs(b[~hit_j])
-            if miss.size:
-                dropped = float(miss.max())
-
-        # 2. accumulated trailing update: one GEMM over the gathered ancestor
-        #    L panels against the solved U rows (MXU kernel on TPU), writing
-        #    straight back into the packed block rows >= s
-        below = store.rows[j][d:]
-        lp = np.empty((len(below), len(anc_rows)), dtype=np.float64)
-        for idx, k in enumerate(anc):
-            lp[:, offs[idx]:offs[idx + 1]] = store.gather_rows_mapped(
-                int(k), *maps.below_maps[idx])
+    lp, b, dropped, flops = _panel_prepare(store, schedule, j, maps=maps)
+    if lp is not None:
+        # accumulated trailing update: one GEMM over the gathered ancestor
+        # L panels against the solved U rows (MXU kernel on TPU), writing
+        # straight back into the packed block rows >= s
+        block = store.blocks[j]
+        d = int(store.diag[j])
         acc = block[d:]
         if backend == "kernel":
             from repro.kernels import ops as kops
@@ -199,13 +237,95 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
         else:
             upd = acc - lp @ b
         block[d:] = upd
-        flops = 2 * len(below) * len(anc_rows) * w
+    _panel_finish(store, schedule, j, piv_tol)
+    return len(schedule.ancestors[j]), flops, dropped
 
-    # 3. diagonal-block factor + below-panel triangular solve
-    lu_inplace(block[d:d + w], piv_tol, col0=s)
-    if block.shape[0] > d + w:
-        block[d + w:] = _solve_upper_right(block[d:d + w], block[d + w:])
-    return len(anc), flops, dropped
+
+def _factor_segment_batched(store: PanelStore, schedule: PanelSchedule,
+                            seg, piv_tol: float, backend: str, maps=None):
+    """Factor one (level, device) panel segment with same-shape GEMMs
+    stacked into single batched dispatches (DESIGN.md §13).
+
+    Three phases over the whole segment: prepare operands for every panel
+    (``_panel_prepare``), apply the trailing GEMMs — panels sharing an
+    (M, K, N) operand shape go through ONE stacked dispatch
+    (``np.matmul`` on the numpy backend, the vmapped
+    ``kernels.ops.panel_update_batched`` Pallas launch on the kernel
+    backend) instead of one call each — then run every diagonal factor
+    (``_panel_finish``) in segment order.  Panels within a level only read
+    strictly-earlier levels and write their own block, so the phase split
+    and the shape grouping cannot change a single float op: the batched
+    stacks are bitwise-identical to per-panel dispatch (per-slice
+    ``np.matmul`` parity on CPU, per-slice grid parity under ``vmap`` on
+    the Pallas side).
+
+    Returns per-panel ``(j, n_updates, flops, dropped)`` tuples so the
+    caller's accounting matches the per-panel path exactly.
+    """
+    out = []
+    operands = {}
+    groups: dict = {}
+    for j in seg:
+        j = int(j)
+        lp, b, dropped, flops = _panel_prepare(
+            store, schedule, j, maps=maps[j] if maps is not None else None)
+        out.append((j, len(schedule.ancestors[j]), flops, dropped))
+        if lp is None:
+            continue
+        operands[j] = (lp, b)
+        groups.setdefault(lp.shape + (b.shape[1],), []).append(j)
+
+    obs_on = _ot.ENABLED
+    batched_calls = 0
+    batched_panels = 0
+    for (m, k, w), js in groups.items():
+        if len(js) == 1:
+            # singleton shape: plain per-panel dispatch (identical floats)
+            j = js[0]
+            lp, b = operands[j]
+            block = store.blocks[j]
+            d = int(store.diag[j])
+            acc = block[d:]
+            if backend == "kernel":
+                from repro.kernels import ops as kops
+
+                upd = np.asarray(kops.panel_update(acc, lp, b),
+                                 dtype=np.float64)
+            else:
+                upd = acc - lp @ b
+            block[d:] = upd
+            continue
+        # stacked same-shape group: one dispatch covers the whole stack,
+        # device-resident on the kernel backend (the segment's
+        # jax.default_device context owns the transfer + launch)
+        accs = np.stack([store.blocks[j][int(store.diag[j]):] for j in js])
+        lps = np.stack([operands[j][0] for j in js])
+        bs = np.stack([operands[j][1] for j in js])
+        if backend == "kernel":
+            from repro.kernels import ops as kops
+
+            upds = np.asarray(kops.panel_update_batched(accs, lps, bs),
+                              dtype=np.float64)
+        else:
+            upds = accs - np.matmul(lps, bs)
+        for bi, j in enumerate(js):
+            d = int(store.diag[j])
+            store.blocks[j][d:] = upds[bi]
+        batched_calls += 1
+        batched_panels += len(js)
+        if obs_on:
+            reg = _om.registry()
+            reg.count("gemm.batched.flops", 2 * len(js) * m * k * w)
+            reg.count("gemm.batched.bytes",
+                      8 * len(js) * (m * k + k * w + 2 * m * w))
+    if obs_on and batched_calls:
+        reg = _om.registry()
+        reg.count("gemm.batched.calls", batched_calls)
+        reg.count("gemm.batched.panels", batched_panels)
+
+    for j in seg:
+        _panel_finish(store, schedule, int(j), piv_tol)
+    return out
 
 
 def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
@@ -216,7 +336,8 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
                     pattern_tol: Optional[float] = None,
                     maps=None, csr_maps=None,
                     store_is_zeroed: bool = False,
-                    placement=None) -> NumericResult:
+                    placement=None,
+                    segment_batch: bool = True) -> NumericResult:
     """Scatter ``values`` into ``store`` and run the level-scheduled panel
     sweep — the value-dependent core shared by one-shot
     ``numeric_factorize`` and plan-based ``LUPlan.factorize`` (which passes
@@ -231,7 +352,13 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     per-device streams; on the "numpy" backend segments order the sweep.
     Panels within a level only ever read strictly-earlier levels and write
     their own block, so segment grouping cannot change a single float op:
-    factors stay bitwise-identical at every device count."""
+    factors stay bitwise-identical at every device count.
+
+    ``segment_batch`` (default on) routes each segment through
+    ``_factor_segment_batched``: same-shape panels issue ONE stacked GEMM
+    dispatch instead of one per panel — bitwise-identical floats, far
+    fewer kernel launches (DESIGN.md §13).  Off = legacy per-panel
+    dispatch, kept as the benchmark comparison point."""
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
     n = store.n
@@ -302,18 +429,24 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
                 track = f"device {d}" if d is not None else None
                 seg_t0 = time.perf_counter() if seg_times is not None else 0.0
                 with ctx, _ot.span("factor_segment", track=track):
-                    for j in seg:
-                        upd, flops, dropped = _factor_panel(
-                            store, schedule, int(j), piv_tol, backend,
-                            maps=maps[j] if maps is not None else None)
+                    if segment_batch and len(seg) > 1:
+                        panel_stats = _factor_segment_batched(
+                            store, schedule, seg, piv_tol, backend,
+                            maps=maps)
+                    else:
+                        panel_stats = [
+                            (int(j),) + _factor_panel(
+                                store, schedule, int(j), piv_tol, backend,
+                                maps=maps[j] if maps is not None else None)
+                            for j in seg]
+                    for j, upd, flops, dropped in panel_stats:
                         n_updates += upd
                         gemm_flops += flops
                         dropped_max = max(dropped_max, dropped)
                         if obs_on and flops:
-                            s_, e_ = schedule.supernodes[int(j)]
+                            s_, e_ = schedule.supernodes[j]
                             w_ = int(e_ - s_)
-                            nb = (len(store.rows[int(j)])
-                                  - int(store.diag[int(j)]))
+                            nb = (len(store.rows[j]) - int(store.diag[j]))
                             k_ = flops // (2 * nb * w_)
                             # gathered L panel + solved U rows read, target
                             # block read + written, all float64
@@ -353,7 +486,8 @@ def numeric_factorize(a: CSRMatrix, sym=None, *,
                       backend: str = "numpy",
                       piv_tol: Optional[float] = None,
                       check_pattern: bool = True,
-                      pattern_tol: Optional[float] = None) -> NumericResult:
+                      pattern_tol: Optional[float] = None,
+                      segment_batch: bool = True) -> NumericResult:
     """Supernodal left-looking LU of ``values`` on A's structure, factored
     in O(nnz(L+U)) packed CSC-panel storage.
 
@@ -433,7 +567,8 @@ def numeric_factorize(a: CSRMatrix, sym=None, *,
     store = PanelStore(pattern, schedule.supernodes)
     result = factor_on_store(a, values, store, schedule, backend=backend,
                              piv_tol=piv_tol, check_pattern=check_pattern,
-                             pattern_tol=pattern_tol)
+                             pattern_tol=pattern_tol,
+                             segment_batch=segment_batch)
     result.elapsed_s = time.perf_counter() - t0
     return result
 

@@ -109,6 +109,25 @@ for name in sorted(GENERATORS):
     if name == "circuit":
         with open(plan_out, "wb") as f:
             pickle.dump(plan, f)
+
+# dynamic-runtime sweep (8-device leg only): the work-stealing scheduler
+# drives the analyze over the forced devices; every plan is saved so the
+# parent can run the elasticity round-trip (place() onto smaller meshes)
+if n_dev == 8:
+    dyn_plans = {}
+    for name in sorted(GENERATORS):
+        a = GENERATORS[name]()
+        a = permute_csr(a, rcm_order(a))
+        dplan = analyze(a, LUOptions(concurrency=32, supernode_relax=2,
+                                     runtime="dynamic"))
+        out[name]["dyn_counts"] = digest(dplan.sym.l_counts,
+                                         dplan.sym.u_counts)
+        out[name]["dyn_pattern"] = digest(dplan.pattern.indptr,
+                                          dplan.pattern.rowind)
+        out[name]["dyn_devices"] = dplan.sym.runtime["n_devices"]
+        dyn_plans[name] = dplan
+    with open(plan_out + ".dyn", "wb") as f:
+        pickle.dump(dyn_plans, f)
 print("RESULT " + json.dumps(out))
 """.replace("__GEN_SRC__", _GEN_SRC)
 
@@ -230,6 +249,44 @@ def test_placement_spreads_panels(count, conformance):
     for name, rec in got.items():
         expect = min(count, rec["max_level_width"])
         assert rec["devices_with_panels"] == expect, (count, name)
+
+
+def test_dynamic_runtime_matches_reference_on_8_devices(conformance,
+                                                        reference):
+    """``LUOptions(runtime="dynamic")`` under 8 forced devices: the
+    work-stealing scheduler's counts and streamed pattern are bitwise the
+    mesh-less reference on every generator."""
+    got, _ = conformance[8]
+    for name, ref in reference.items():
+        assert got[name]["dyn_counts"] == ref["counts"], name
+        assert got[name]["dyn_pattern"] == ref["pattern"], name
+        assert got[name]["dyn_devices"] == 8, name
+
+
+def test_dynamic_plan_elastic_replacement(conformance, reference):
+    """Elasticity round-trip: plans the dynamic runtime analyzed under 8
+    forced devices reload in this (1-device) process, ``place()`` onto
+    D in {1, 2}, and factorize + solve bitwise-identically to the
+    mesh-less reference on every generator."""
+    from repro.sparse.numeric import generic_values_csr
+
+    _, plan_path = conformance[8]
+    with open(str(plan_path) + ".dyn", "rb") as f:
+        dyn_plans = pickle.load(f)
+    assert sorted(dyn_plans) == sorted(reference)
+    for name, plan in sorted(dyn_plans.items()):
+        values = generic_values_csr(plan.a)
+        rng = np.random.default_rng(0)
+        b1 = rng.standard_normal(plan.n)
+        bk = rng.standard_normal((plan.n, 3))
+        for d in (1, 2):
+            p = pickle.loads(pickle.dumps(plan)).place(d)
+            assert p.placement.n_devices <= d
+            factor = p.factorize(values)
+            assert _digest(*factor.num.store.blocks) == \
+                reference[name]["factors"], (name, d)
+            assert _digest(factor.solve(b1).x, factor.solve(bk).x) == \
+                reference[name]["solve"], (name, d)
 
 
 def test_cross_process_plan_reuse(conformance, reference):

@@ -1,13 +1,35 @@
 """Fault-tolerance runtime: dynamic scheduler, checkpoint/restart, elasticity."""
 import os
 
+import jax
 import numpy as np
+import pytest
 
+import repro
+from repro.api import LUOptions
 from repro.core.gsofa import prepare_graph
 from repro.core.symbolic import ChunkCheckpointer, symbolic_factorize
 from repro.core.theory import elimination_fill
 from repro.runtime.scheduler import DynamicScheduler
-from repro.sparse import economic_like
+from repro.sparse import (
+    banded_full, banded_random, bordered_block_diagonal, chemical_like,
+    circuit_like, economic_like, grid2d_laplacian, grid3d_laplacian,
+    random_pattern,
+)
+
+# same family as tests/test_distributed_plan.py: every structure generator,
+# sized for fast turnaround
+GENERATORS = {
+    "grid2d": lambda: grid2d_laplacian(10),
+    "grid3d": lambda: grid3d_laplacian(5),
+    "circuit": lambda: circuit_like(200, seed=7),
+    "economic": lambda: economic_like(192, block=16, seed=2),
+    "chemical": lambda: chemical_like(240, stage=16, seed=3),
+    "banded": lambda: banded_random(160, band=6, seed=4),
+    "banded_full": lambda: banded_full(150, band=5),
+    "random": lambda: random_pattern(120, density=0.02, seed=5),
+    "bbd": lambda: bordered_block_diagonal(320, block=16, border=32, seed=6),
+}
 
 
 def _refs(a):
@@ -85,3 +107,164 @@ def test_checkpointer_restore(tmp_path):
     # a checkpoint for a different matrix order is ignored
     ck3 = ChunkCheckpointer(path, 11)
     assert not ck3.done
+
+
+# ---- plan-integrated dynamic runtime (DESIGN.md §13) ---------------------
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_dynamic_runtime_matches_static_analyze(name):
+    """``LUOptions(runtime="dynamic")`` drives ``repro.analyze`` through the
+    work-stealing scheduler; counts, pattern, and supernode partition must
+    be bitwise-identical to the static chunk loop on every structure."""
+    a = GENERATORS[name]()
+    static = repro.analyze(a, LUOptions(concurrency=48, supernode_relax=2))
+    dyn = repro.analyze(a, LUOptions(concurrency=48, supernode_relax=2,
+                                     runtime="dynamic"))
+    assert np.array_equal(dyn.sym.l_counts, static.sym.l_counts)
+    assert np.array_equal(dyn.sym.u_counts, static.sym.u_counts)
+    assert np.array_equal(dyn.sym.supernodes, static.sym.supernodes)
+    assert np.array_equal(dyn.pattern.indptr, static.pattern.indptr)
+    assert np.array_equal(dyn.pattern.rowind, static.pattern.rowind)
+    assert dyn.sym.runtime is not None
+    assert dyn.sym.runtime["completed"] == dyn.sym.runtime["chunks"]
+    # the dynamic plan carries a placement for the visible devices
+    assert dyn.placement is not None
+
+
+def test_dynamic_runtime_factors_and_solve_match():
+    a = circuit_like(200, seed=7)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal((a.n, 3))
+    f_s = repro.analyze(a, LUOptions(concurrency=32)).factorize(None)
+    f_d = repro.analyze(
+        a, LUOptions(concurrency=32, runtime="dynamic")).factorize(None)
+    assert np.array_equal(f_d.l, f_s.l)
+    assert np.array_equal(f_d.u, f_s.u)
+    assert np.array_equal(f_d.solve(b).x, f_s.solve(b).x)
+
+
+def test_dynamic_runtime_rejects_mesh_and_distribute():
+    with pytest.raises(ValueError, match="dynamic"):
+        LUOptions(runtime="dynamic", distribute=True)
+    with pytest.raises(ValueError, match="runtime"):
+        LUOptions(runtime="bogus")
+
+
+def test_dynamic_runtime_checkpoint_restart(tmp_path):
+    """A dynamic-runtime analyze restarted from a truncated checkpoint
+    recomputes only the pending chunks and still delivers the complete
+    pattern + supernode partition (the covered sources' collector re-run)."""
+    a = economic_like(192, block=16, seed=33)
+    static = symbolic_factorize(a, concurrency=64, detect_supernodes=True)
+    path = os.path.join(tmp_path, "ckpt.jsonl")
+    r1 = symbolic_factorize(a, concurrency=64, checkpoint_path=path,
+                            runtime="dynamic", detect_supernodes=True)
+    assert np.array_equal(r1.l_counts, static.l_counts)
+    with open(path) as f:
+        first = f.readline()
+    with open(path, "w") as f:
+        f.write(first)
+    r2 = symbolic_factorize(a, concurrency=64, checkpoint_path=path,
+                            runtime="dynamic", detect_supernodes=True)
+    assert np.array_equal(r2.l_counts, static.l_counts)
+    assert np.array_equal(r2.u_counts, static.u_counts)
+    assert np.array_equal(r2.supernodes, static.supernodes)
+    assert r2.supersteps < r1.supersteps
+
+
+def test_scheduler_elastic_join():
+    """Start on one executor slot, activate the rest mid-run: the queue
+    drains correctly and the late joiners' pulls count as steals."""
+    a = economic_like(160, block=16, seed=36)
+    l_ref, u_ref = _refs(a)
+    sched = DynamicScheduler(prepare_graph(a), devices=jax.devices() * 4,
+                             concurrency=16)
+    out = sched.run(join_devices_after=2)
+    assert np.array_equal(out["l_counts"], l_ref)
+    assert np.array_equal(out["u_counts"], u_ref)
+    assert out["completed"] == out["chunks"]
+
+
+def test_scheduler_straggler_reissue_and_retire():
+    """A flight that never reports ready is speculatively re-issued to an
+    idle slot; when the copy wins, the straggler flight is retired — and
+    the results stay bitwise-correct (exactly-once delivery)."""
+    a = economic_like(160, block=16, seed=35)
+    l_ref, u_ref = _refs(a)
+    sched = DynamicScheduler(prepare_graph(a), devices=jax.devices() * 3,
+                             concurrency=32, timeout_factor=0.0)
+    orig_ready = DynamicScheduler._ready
+    stuck = {}
+
+    def ready(fl):
+        # the FIRST flight of chunk 1 is a permanent straggler; re-issued
+        # copies (fresh _InFlight objects) complete normally
+        if fl.chunk_id == 1 and stuck.setdefault(1, fl) is fl:
+            return False
+        return orig_ready(fl)
+
+    sched._ready = ready
+    out = sched.run()
+    assert sched.reissues >= 1
+    assert sched.retired >= 1
+    assert out["completed"] == out["chunks"]
+    assert np.array_equal(out["l_counts"], l_ref)
+    assert np.array_equal(out["u_counts"], u_ref)
+
+
+def test_dynamic_runtime_obs_counters():
+    """Tracing on: the dynamic analyze emits the ``runtime`` span and the
+    steal/re-issue/chunk counters through the obs registry."""
+    from repro.obs import metrics as om
+    from repro.obs import trace as ot
+
+    a = economic_like(160, block=16, seed=37)
+    ot.disable()
+    om.registry().reset()
+    try:
+        ot.enable()
+        plan = repro.analyze(a, LUOptions(concurrency=32, runtime="dynamic"))
+        snap = om.registry().snapshot()
+        assert snap["counters"]["runtime.chunks"] == plan.sym.runtime["chunks"]
+        assert "runtime.steals" in snap["counters"]
+        assert "runtime.reissues" in snap["counters"]
+        assert plan.stats is not None and plan.stats.find("runtime") is not None
+    finally:
+        ot.disable()
+        om.registry().reset()
+
+
+def test_segment_batch_toggle_bitwise_identical():
+    """The batched same-shape segment GEMMs (LUOptions.segment_batch, on by
+    default) are bitwise-identical to per-panel dispatch on both numeric
+    backends, and report batched-dispatch counters when tracing."""
+    from repro.obs import metrics as om
+    from repro.obs import trace as ot
+
+    a = bordered_block_diagonal(320, block=16, border=32, seed=6)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(a.n)
+    for backend in ("numpy", "kernel"):
+        base = LUOptions(concurrency=48, supernode_relax=2,
+                         numeric_backend=backend)
+        f_on = repro.analyze(a, base).factorize(None)
+        f_off = repro.analyze(
+            a, base.replace(segment_batch=False)).factorize(None)
+        assert np.array_equal(f_on.l, f_off.l), backend
+        assert np.array_equal(f_on.u, f_off.u), backend
+        assert np.array_equal(f_on.solve(b).x, f_off.solve(b).x), backend
+    # batched dispatch actually engaged (bbd has many same-shape panels)
+    ot.disable()
+    om.registry().reset()
+    try:
+        ot.enable()
+        repro.analyze(a, LUOptions(concurrency=48,
+                                   supernode_relax=2)).factorize(None)
+        snap = om.registry().snapshot()
+        assert snap["counters"].get("gemm.batched.calls", 0) >= 1
+        assert (snap["counters"]["gemm.batched.panels"]
+                > snap["counters"]["gemm.batched.calls"])
+    finally:
+        ot.disable()
+        om.registry().reset()
