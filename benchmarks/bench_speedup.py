@@ -16,8 +16,6 @@ Both implementations are verified to produce identical structures
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import load_datasets, print_table, save_artifact, timeit
 from repro.core.fill2 import fill2_all
 from repro.core.gsofa import prepare_graph

@@ -31,7 +31,8 @@ def run(codes=("BC", "RM", "TT", "PR"), concurrency: int = 128) -> dict:
             "last_decile": last,
             "growth_ratio": last / first,
             "max_over_min_source": float(max(1.0, ec.max())
-                                         / max(1.0, ec[ec > 0].min() if (ec > 0).any() else 1.0)),
+                                         / max(1.0, ec[ec > 0].min()
+                                               if (ec > 0).any() else 1.0)),
         }
         results[code] = r
         rows.append([code, a.n, f"{r['first_decile']:.1f}", f"{r['last_decile']:.1f}",

@@ -18,6 +18,7 @@ Paper-figure map:
   refactorize  -> DESIGN.md §10 (plan reuse: analyze once, refactorize many)
   distributed  -> DESIGN.md §11 (panel placement + 8-device analyze parity)
   roofline     -> DESIGN.md §12 (machine peak probe: STREAM triad + DGEMM)
+  serve        -> DESIGN.md §14 (plan cache + batched factorize/solve tier)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
 
@@ -64,6 +65,7 @@ REQUIRED_PHASES = {
                     "factor_segment", "solve_forward", "solve_backward",
                     "runtime", "overlap"],
     "roofline": [],
+    "serve": ["serve", "factorize_batch", "solve_batch"],
 }
 
 
@@ -161,9 +163,9 @@ def main() -> None:
 
     from benchmarks import (bench_balance, bench_concurrency,
                             bench_distributed, bench_numeric,
-                            bench_refactorize, bench_solve, bench_space,
-                            bench_speedup, bench_supernode, bench_workload,
-                            roofline)
+                            bench_refactorize, bench_serve, bench_solve,
+                            bench_space, bench_speedup, bench_supernode,
+                            bench_workload, roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
@@ -176,6 +178,7 @@ def main() -> None:
         ("refactorize", bench_refactorize.main),
         ("distributed", bench_distributed.main),
         ("roofline", roofline.main),
+        ("serve", bench_serve.main),
     ]
     if args.trace:
         import benchmarks.common as common

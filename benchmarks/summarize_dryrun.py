@@ -36,7 +36,8 @@ def main() -> None:
         ])
 
     lines = ["# Dry-run summary", "",
-             "| cell | compile s | args GB/dev | temp GB/dev | peak GB/dev | fits 16G | collectives (full-step HLO, scan bodies once) |",
+             "| cell | compile s | args GB/dev | temp GB/dev | peak GB/dev "
+             "| fits 16G | collectives (full-step HLO, scan bodies once) |",
              "|---|---|---|---|---|---|---|"]
     for r in rows:
         lines.append("| " + " | ".join(str(x) for x in r) + " |")

@@ -14,7 +14,8 @@ single and multi-RHS systems with iterative refinement.  The symbolic
 prediction is validated two independent ways along the way (sequential
 fill2 and a numeric LU restricted to the pattern).
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np

@@ -22,7 +22,7 @@ The legacy one-shot trio (``symbolic_factorize`` -> ``numeric_factorize``
 ``DeprecationWarning`` period; the engines remain importable from
 ``repro.core.symbolic`` and ``repro.numeric``.
 """
-__version__ = "1.4.0"
+__version__ = "1.5.0"
 
 _LAZY_EXPORTS = {
     # plan/factor session API (the supported surface)
@@ -30,11 +30,19 @@ _LAZY_EXPORTS = {
     "LUOptions": "repro.api",
     "LUPlan": "repro.api",
     "LUFactorization": "repro.api",
+    "BatchedLUFactorization": "repro.api",
+    # serving front end (DESIGN.md §14)
+    "SolverEngine": "repro.serve",
+    "PlanCache": "repro.serve",
+    "pattern_fingerprint": "repro.serve",
     # result / substrate types
     "SymbolicResult": "repro.core.symbolic",
     "NumericResult": "repro.numeric",
+    "BatchedNumericResult": "repro.numeric",
     "SolveResult": "repro.numeric",
+    "BatchedSolveResult": "repro.numeric",
     "PanelStore": "repro.numeric",
+    "BatchedPanelStore": "repro.numeric",
     "PanelPlacement": "repro.numeric",
     "CSCPattern": "repro.numeric",
     "ZeroPivotError": "repro.sparse.numeric",

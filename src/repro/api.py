@@ -65,10 +65,18 @@ from repro.numeric.schedule import (
     PanelPlacement, PanelSchedule, build_gather_maps, build_placement,
     build_schedule,
 )
-from repro.numeric.solve import SolveResult, SolveSchedule, build_solve_schedule
+from repro.numeric.solve import (
+    BatchedSolveResult, SolveResult, SolveSchedule, build_solve_schedule,
+)
 from repro.numeric.solve import solve as _solve
-from repro.numeric.storage import CSCPattern, CsrScatterMaps, PanelStore
-from repro.numeric.supernodal import NumericResult, factor_on_store
+from repro.numeric.solve import solve_batch as _solve_batch
+from repro.numeric.storage import (
+    BatchedPanelStore, CSCPattern, CsrScatterMaps, PanelStore,
+)
+from repro.numeric.supernodal import (
+    BatchedNumericResult, NumericResult, factor_batch_on_store,
+    factor_on_store,
+)
 from repro.obs import trace as _ot
 from repro.obs.trace import SpanSummary
 from repro.sparse.csr import CSRMatrix
@@ -232,6 +240,61 @@ class LUFactorization:
 
 
 @dataclasses.dataclass
+class BatchedLUFactorization:
+    """Factors of B same-pattern value sets in one batched sweep
+    (DESIGN.md §14) — the many-matrix tier of the session API.
+
+    ``solve_batch`` runs the substitution level sweeps + iterative
+    refinement across all B systems at once; ``system(i)`` exposes system
+    i as an ordinary ``LUFactorization`` over zero-copy views of the
+    batched buffers, so everything downstream of the sequential API
+    (solve, dense oracle reconstruction) works per system.  Every per-
+    system result is bitwise-identical to the sequential
+    ``plan.factorize(values_batch[i])`` / ``.solve(b[i])`` loop.
+    """
+
+    plan: "LUPlan"
+    num: BatchedNumericResult
+    values: np.ndarray           # (B, nnz) — what was factored
+    factor_s: float              # scatter + batched panel-sweep wall time
+    stats: Optional[SpanSummary] = None
+
+    @property
+    def batch(self) -> int:
+        return self.num.batch
+
+    @property
+    def n(self) -> int:
+        return self.num.n
+
+    @property
+    def store(self) -> BatchedPanelStore:
+        return self.num.store
+
+    def system(self, i: int) -> LUFactorization:
+        """System i as a sequential ``LUFactorization`` (zero-copy factor
+        views; its ``factor_s`` is 0.0 — the batch owns the timing)."""
+        return LUFactorization(plan=self.plan, num=self.num.system(i),
+                               values=self.values[i], factor_s=0.0)
+
+    def solve_batch(self, b: np.ndarray, *,
+                    refine_iters: Optional[int] = None,
+                    refine_tol: Optional[float] = None
+                    ) -> BatchedSolveResult:
+        """Solve A_i x_i = b_i for every system on the existing factors.
+        ``b`` is (B, n) or (B, n, k); refinement knobs default to the
+        plan's ``LUOptions``.  Refinement masks per system, so each
+        system's solution and residual history match the sequential
+        ``factor.solve`` loop bitwise."""
+        opts = self.plan.options
+        return _solve_batch(
+            self.plan.a, b, self.values, self.num,
+            refine_iters=(opts.refine_iters if refine_iters is None
+                          else refine_iters),
+            refine_tol=opts.refine_tol if refine_tol is None else refine_tol)
+
+
+@dataclasses.dataclass
 class LUPlan:
     """One matrix structure, analyzed once: the symbolic prediction plus
     every value-independent precomputation of the numeric pipeline.
@@ -338,6 +401,47 @@ class LUPlan:
                                values=np.asarray(values, dtype=np.float64),
                                factor_s=time.perf_counter() - t0,
                                stats=stats)
+
+    def factorize_batch(self, values_batch: np.ndarray
+                        ) -> BatchedLUFactorization:
+        """Numeric factorization of B same-pattern value sets in ONE
+        batched level sweep (DESIGN.md §14): ``values_batch`` is a
+        (B, nnz) CSR-aligned stack; every per-panel operation of the
+        sweep broadcasts over the leading system axis, so the per-call
+        Python/scheduling overhead is paid once for the whole batch —
+        the circuit-simulation regime (Newton iterations, transient
+        sweeps, Monte Carlo corners sharing one pattern).
+
+        System i's factors are bitwise-identical to
+        ``self.factorize(values_batch[i])`` — property-tested across
+        every ``sparse/matrices.py`` generator."""
+        t0 = time.perf_counter()
+        values_batch = np.asarray(values_batch, dtype=np.float64)
+        if values_batch.ndim != 2:
+            raise ValueError(
+                f"values_batch must be a (B, {self.a.nnz}) CSR-aligned "
+                f"stack, got shape {values_batch.shape}")
+        bstore = BatchedPanelStore(self.store_template,
+                                   values_batch.shape[0])
+        # solve_batch levels come from the plan, cached where the batched
+        # substitution looks for them (the shared structure template)
+        self.store_template._solve_schedule = self.solve_schedule
+        with _ot.ensure(self.options.trace) as tr:
+            mark = tr.mark() if tr is not None else 0
+            with _ot.span("factorize_batch"):
+                num = factor_batch_on_store(
+                    self.a, values_batch, bstore, self.schedule,
+                    backend=self.options.numeric_backend,
+                    piv_tol=self.options.piv_tol,
+                    check_pattern=self.options.check_pattern,
+                    pattern_tol=self.options.pattern_tol,
+                    maps=self.gather_maps, csr_maps=self.csr_maps,
+                    store_is_zeroed=True)
+            stats = tr.summary(mark) if tr is not None else None
+        return BatchedLUFactorization(plan=self, num=num,
+                                      values=values_batch,
+                                      factor_s=time.perf_counter() - t0,
+                                      stats=stats)
 
     def solve(self, b: np.ndarray,
               values: Optional[np.ndarray] = None) -> SolveResult:

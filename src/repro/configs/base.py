@@ -8,7 +8,7 @@ SSM / hybrid / enc-dec / VLM backbone) via the ``pattern`` of per-layer
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 # mixer kinds: "attn" (global), "local" (sliding window), "mla", "rwkv6", "mamba"
 # ffn kinds:   "mlp" (swiglu), "moe", "none"
@@ -104,8 +104,9 @@ class ModelConfig:
     @property
     def full_pattern(self) -> Tuple[LayerKind, ...]:
         reps = self.n_layers // len(self.pattern)
-        assert reps * len(self.pattern) == self.n_layers, \
-            f"{self.name}: n_layers {self.n_layers} not divisible by pattern {len(self.pattern)}"
+        assert reps * len(self.pattern) == self.n_layers, (
+            f"{self.name}: n_layers {self.n_layers} not divisible by "
+            f"pattern {len(self.pattern)}")
         return self.pattern
 
     @property
@@ -137,7 +138,8 @@ class ModelConfig:
                 count += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (
                     m.nope_head_dim + m.rope_head_dim)
                 count += d * (m.kv_lora_rank + m.rope_head_dim)
-                count += m.kv_lora_rank * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+                count += (m.kv_lora_rank * self.n_heads
+                          * (m.nope_head_dim + m.v_head_dim))
                 count += self.n_heads * m.v_head_dim * d
             elif mixer == "rwkv6":
                 count += 5 * d * d + 2 * d * 64  # r,k,v,g,o + decay lora
@@ -161,7 +163,8 @@ class ModelConfig:
             return self.param_count()
         full = self.param_count()
         per_expert = 3 * self.d_model * self.moe.d_expert
-        n_moe_layers = sum(1 for _, f in self.full_pattern if f == "moe") * self.n_groups
+        n_moe_layers = (sum(1 for _, f in self.full_pattern if f == "moe")
+                        * self.n_groups)
         inactive = n_moe_layers * (self.moe.n_experts - self.moe.top_k) * per_expert
         return full - inactive
 

@@ -27,7 +27,6 @@ def fill2_row(a: CSRMatrix, src: int, fill: np.ndarray, *, count_edges: bool = F
     Returns (sorted column ids, #edge checks) — the edge-check counter is the
     workload metric used in the paper's Figs 7/8.
     """
-    n = a.n
     edge_checks = 0
     fill[src] = src
     out: List[int] = []

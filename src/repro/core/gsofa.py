@@ -44,7 +44,8 @@ import numpy as np
 
 from repro.sparse.csr import CSRMatrix, csr_to_ell, dense_block_adjacency, transpose_csr
 
-INF = jnp.int32(jnp.iinfo(jnp.int32).max)  # label "uninitialized / unreachable / masked"
+# label "uninitialized / unreachable / masked"
+INF = jnp.int32(jnp.iinfo(jnp.int32).max)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -131,7 +132,8 @@ def relax_ell(prop: jax.Array, graph: SymbolicGraph) -> jax.Array:
     """Candidate labels via ELL gather: cand[s, v] = min_{u in in-nbr(v)} prop[s, u]."""
     prop_pad = jnp.concatenate(
         [prop, jnp.full((prop.shape[0], 1), INF, dtype=jnp.int32)], axis=1)
-    gathered = jnp.take(prop_pad, graph.in_ell, axis=1)  # (S, V, K_in); pad idx V -> INF
+    # (S, V, K_in); pad idx V -> INF
+    gathered = jnp.take(prop_pad, graph.in_ell, axis=1)
     return jnp.min(gathered, axis=2)
 
 

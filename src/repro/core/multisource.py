@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Iterator, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +27,8 @@ import numpy as np
 
 from repro.core import gsofa
 from repro.core.gsofa import (
-    INF, FixpointResult, SymbolicGraph, compute_prop, fill_masks, gsofa_batch,
-    init_labels, relax_ell, row_counts,
+    INF, SymbolicGraph, compute_prop, fill_masks, init_labels, relax_ell,
+    row_counts,
 )
 from repro.core.spaceopt import LabelArena, auto_concurrency
 from repro.obs import metrics as _om
@@ -54,7 +54,8 @@ def plan_chunks(n: int, concurrency: int, *, bubble: bool = False,
             srcs = np.concatenate(
                 [srcs, np.full(concurrency - n_real, srcs[-1], dtype=np.int32)])
         if bubble:
-            width = min(n, math.ceil((int(srcs[:n_real].max()) + 1) / round_to) * round_to)
+            width = min(n, math.ceil((int(srcs[:n_real].max()) + 1)
+                                     / round_to) * round_to)
         else:
             width = n
         chunks.append(Chunk(srcs=srcs, n_real=n_real, width=width))

@@ -6,8 +6,6 @@ pure-jnp oracles the tests compare against.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -155,6 +153,32 @@ def panel_update_batched(acc: jax.Array, l_panel: jax.Array,
     return out[:, :m, :n]
 
 
+def panel_update_systems(acc, l_panel, u_panel, *,
+                         interpret: bool | None = None) -> jax.Array:
+    """Stacked panel updates with arbitrary leading batch axes — the
+    many-matrix tier's GEMM entry point (DESIGN.md §14).
+
+    ``acc`` is (..., M, N), ``l_panel`` (..., M, K), ``u_panel`` (..., K, N);
+    every leading axis (systems, same-shape panel groups, or both) is
+    flattened into the one stacked-batch axis ``panel_update_batched``
+    already launches over, so a (B_systems, M, N) system batch and a
+    (B_systems, G, M, N) system-x-group batch reuse the same single Pallas
+    dispatch — and every slice stays bitwise-identical to its own
+    per-panel ``panel_update`` call (the vmap per-slice grid parity that
+    the within-plan segment batching relies on)."""
+    acc = jnp.asarray(acc, jnp.float32)
+    l_panel = jnp.asarray(l_panel, jnp.float32)
+    u_panel = jnp.asarray(u_panel, jnp.float32)
+    lead = acc.shape[:-2]
+    m, n = acc.shape[-2:]
+    k = l_panel.shape[-1]
+    out = panel_update_batched(acc.reshape((-1, m, n)),
+                               l_panel.reshape((-1, m, k)),
+                               u_panel.reshape((-1, k, n)),
+                               interpret=interpret)
+    return out.reshape(lead + (m, n))
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, scale: float | None = None,
                     block_q: int = 128, block_k: int = 128,
@@ -180,7 +204,6 @@ def mamba_scan(x, dt, b_t, c_t, a, d_skip, *, block_d: int = 512,
     bsz, l, di = x.shape
     block_d = min(block_d, di)
     block_t = min(block_t, max(8, l))
-    pads = []
     def padded(t, axis, mult):
         return _pad_to(t, axis, mult, 0.0)
     xp = padded(padded(x, 1, block_t), 2, block_d)

@@ -26,7 +26,6 @@ and multiplied analytically by the trip count.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import re
 from collections import Counter
 from typing import Any, Dict, List, Optional, Tuple
@@ -39,7 +38,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer as tf
 from repro.train import sharding as shd
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
-from repro.train.steps import batch_specs, cache_specs, param_specs
+from repro.train.steps import cache_specs, param_specs
 
 # ---------------------------------------------------------------------------
 # HLO parsing

@@ -112,7 +112,6 @@ def run_gsofa_cell(multi_pod: bool, n: int = 1 << 20, k_in: int = 16,
     """
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.core.distributed import make_distributed_counts
     from repro.core.gsofa import SymbolicGraph

@@ -330,9 +330,11 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
         "wq_b": _normal(keys[1], (m.q_lora_rank, h * qd), m.q_lora_rank ** -0.5, dtype),
         "wkv_a": _normal(keys[2], (d, m.kv_lora_rank + m.rope_head_dim), s, dtype),
         "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
-        "wkv_b": _normal(keys[3], (m.kv_lora_rank, h * (m.nope_head_dim + m.v_head_dim)),
+        "wkv_b": _normal(keys[3],
+                         (m.kv_lora_rank, h * (m.nope_head_dim + m.v_head_dim)),
                          m.kv_lora_rank ** -0.5, dtype),
-        "wo": _normal(keys[4], (h * m.v_head_dim, d), (h * m.v_head_dim) ** -0.5, dtype),
+        "wo": _normal(keys[4], (h * m.v_head_dim, d),
+                      (h * m.v_head_dim) ** -0.5, dtype),
     }
 
 

@@ -6,7 +6,6 @@ accumulate in float32.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict
 
 import jax

@@ -64,7 +64,8 @@ def _dispatch_row(xf: jax.Array, logits: jax.Array, cap: int, m) -> Tuple:
     sort_i = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[sort_i]
     seg_start = jnp.searchsorted(sorted_e, jnp.arange(m.n_experts, dtype=flat_e.dtype))
-    pos_sorted = jnp.arange(s * k, dtype=jnp.int32) - seg_start[sorted_e].astype(jnp.int32)
+    pos_sorted = (jnp.arange(s * k, dtype=jnp.int32)
+                  - seg_start[sorted_e].astype(jnp.int32))
     pos = jnp.zeros((s * k,), jnp.int32).at[sort_i].set(pos_sorted)
 
     keep = pos < cap

@@ -109,7 +109,6 @@ def rwkv6_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
                   state: Dict | None = None) -> Tuple[jax.Array, Dict]:
     """Full-sequence (train / prefill) time-mix. Returns (out, final_state)."""
     b, l, d = x.shape
-    hs = cfg.ssm.head_size
     if state is None:
         state = init_rwkv6_state(cfg, b, x.dtype)
     r, k, v, g, w = _projections(params, x, state["x_prev"], cfg)

@@ -329,7 +329,8 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array, *,
         caches_out = []
         for g in range(cfg.n_groups):
             gp = jax.tree.map(lambda t: t[g], params["groups"])
-            cache_g = jax.tree.map(lambda t: t[g], caches) if caches is not None else None
+            cache_g = (jax.tree.map(lambda t: t[g], caches)
+                       if caches is not None else None)
             x, nc, aux_i = step(x, gp, cache_g)
             aux = aux + aux_i
             caches_out.append(nc)

@@ -27,24 +27,32 @@ from repro.numeric.schedule import (
     build_placement, build_schedule,
 )
 from repro.numeric.solve import (
-    SolveResult, SolveSchedule, backward_substitute, build_solve_schedule,
-    forward_substitute, solve, solve_factored,
+    BatchedSolveResult, SolveResult, SolveSchedule, backward_substitute,
+    backward_substitute_batch, build_solve_schedule, forward_substitute,
+    forward_substitute_batch, solve, solve_batch, solve_factored,
+    solve_factored_batch,
 )
 from repro.numeric.storage import (
-    CSCPattern, CsrScatterMaps, PanelStore, uniform_supernodes,
+    BatchedPanelStore, CSCPattern, CsrScatterMaps, PanelStore,
+    uniform_supernodes,
 )
 from repro.numeric.supernodal import (
-    NumericResult, factor_on_store, factorize_columns, numeric_factorize,
+    BatchedNumericResult, NumericResult, factor_batch_on_store,
+    factor_on_store, factorize_columns, numeric_factorize,
 )
 from repro.sparse.numeric import ZeroPivotError
 
 __all__ = [
     "PanelMaps", "PanelPlacement", "PanelSchedule", "build_gather_maps",
     "build_placement", "build_schedule",
-    "CSCPattern", "CsrScatterMaps", "PanelStore", "uniform_supernodes",
-    "NumericResult", "factor_on_store", "factorize_columns",
-    "numeric_factorize",
-    "SolveResult", "SolveSchedule", "build_solve_schedule",
+    "CSCPattern", "CsrScatterMaps", "PanelStore", "BatchedPanelStore",
+    "uniform_supernodes",
+    "NumericResult", "BatchedNumericResult", "factor_on_store",
+    "factor_batch_on_store", "factorize_columns", "numeric_factorize",
+    "SolveResult", "BatchedSolveResult", "SolveSchedule",
+    "build_solve_schedule",
     "forward_substitute", "backward_substitute", "solve", "solve_factored",
+    "forward_substitute_batch", "backward_substitute_batch", "solve_batch",
+    "solve_factored_batch",
     "ZeroPivotError",
 ]

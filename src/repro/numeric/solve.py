@@ -30,13 +30,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 from scipy.linalg import solve_triangular
 
-from repro.numeric.storage import PanelStore
-from repro.numeric.supernodal import NumericResult, numeric_factorize
+from repro.numeric.storage import BatchedPanelStore, PanelStore
+from repro.numeric.supernodal import (
+    BatchedNumericResult, NumericResult, numeric_factorize,
+)
 from repro.obs import trace as _ot
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import csr_matvec, generic_values_csr
@@ -381,3 +383,239 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     return SolveResult(x=x, residuals=residuals, num=num, factor_s=factor_s,
                        solve_s=time.perf_counter() - t0 - factor_s,
                        refine_accepted=accepted)
+
+
+# -- batched-over-systems tier (DESIGN.md §14) ------------------------------
+#
+# Substitution over a ``BatchedPanelStore``: every per-panel push and scatter
+# carries a leading system axis (stacked ``np.matmul`` / fancy indexing —
+# per-slice bitwise-identical to the 2D forms), while the per-panel diagonal
+# solves follow exactly the algorithm the sequential path would pick for ONE
+# system of the same RHS shape: per-system LAPACK for vector RHS
+# (``batched=False``), the width-grouped einsum sweeps stacked over systems
+# for multi-RHS (``batched=True``).  System i of every result is therefore
+# bitwise-identical to a loop of ``forward/backward_substitute`` /
+# ``solve`` over the systems.
+
+
+def _level_diag_solves_batch(bstore: BatchedPanelStore, level: np.ndarray,
+                             y: np.ndarray, *, lower: bool) -> None:
+    """Phase 1 of one substitution level for all B systems: ``y`` is
+    (B, n) (per-system LAPACK solves, the sequential vector path) or
+    (B, n, k) (width-grouped einsum sweeps with the systems stacked into
+    the panel axis, the sequential multi-RHS path)."""
+    store = bstore.template
+    bsz = bstore.batch
+    if y.ndim == 3:
+        widths = (store.supernodes[level, 1] - store.supernodes[level, 0])
+        for w in np.unique(widths):
+            ids = level[widths == w]
+            if not lower:
+                if w == 1:
+                    diag = np.stack(
+                        [bstore.blocks[int(j)][:, int(store.diag[j]), 0]
+                         for j in ids], axis=1)            # (B, p)
+                    starts = store.supernodes[ids, 0]
+                    y[:, starts] /= diag[:, :, None]
+                    continue
+            if w == 1:
+                continue           # unit lower: nothing to solve
+            # (B, p, w, .) stacked over systems -> (B*p, w, .): the einsum
+            # row sweeps contract per (panel, column) slice, so deepening
+            # the panel axis with the batch cannot change a float op
+            mats = np.stack(
+                [bstore.blocks[int(j)][:, int(store.diag[j]):
+                                       int(store.diag[j]) + w]
+                 for j in ids], axis=1)
+            rhs = np.stack([y[:, s:e] for s, e in store.supernodes[ids]],
+                           axis=1)
+            k = y.shape[2]
+            mats = mats.reshape(bsz * len(ids), w, w)
+            rhs = rhs.reshape(bsz * len(ids), w, k)
+            rhs = (_batched_solve_unit_lower(mats, rhs) if lower
+                   else _batched_solve_upper(mats, rhs))
+            rhs = rhs.reshape(bsz, len(ids), w, k)
+            for pi, (s, e) in enumerate(store.supernodes[ids]):
+                y[:, s:e] = rhs[:, pi]
+        return
+    for j in level:
+        s, e = store.supernodes[j]
+        w = e - s
+        d = int(store.diag[j])
+        if lower:
+            if w > 1:
+                for i in range(bsz):
+                    y[i, s:e] = solve_triangular(
+                        bstore.blocks[j][i, d:d + w], y[i, s:e], lower=True,
+                        unit_diagonal=True, check_finite=False)
+        else:
+            if w == 1:
+                y[:, s] = y[:, s] / bstore.blocks[j][:, d, 0]
+            else:
+                for i in range(bsz):
+                    y[i, s:e] = solve_triangular(
+                        bstore.blocks[j][i, d:d + w], y[i, s:e], lower=False,
+                        check_finite=False)
+
+
+def forward_substitute_batch(bstore: BatchedPanelStore,
+                             b: np.ndarray) -> np.ndarray:
+    """y with L_i y_i = b_i for every system i; ``b`` is (B, n) or
+    (B, n, k)."""
+    y = np.asarray(b, dtype=np.float64).copy()
+    store = bstore.template
+    with _ot.span("solve_forward"):
+        for level in _solve_schedule_of(store).fwd_levels:
+            with _ot.span("fwd_level"):
+                _level_diag_solves_batch(bstore, level, y, lower=True)
+                for j in level:               # ascending: fwd_levels sorted
+                    s, e = store.supernodes[j]
+                    d = int(store.diag[j])
+                    below = store.rows[j][d + (e - s):]
+                    if len(below):
+                        blk = bstore.blocks[j][:, d + (e - s):]
+                        if y.ndim == 2:
+                            y[:, below] -= np.matmul(
+                                blk, y[:, s:e, None])[..., 0]
+                        else:
+                            y[:, below] -= np.matmul(blk, y[:, s:e])
+    return y
+
+
+def backward_substitute_batch(bstore: BatchedPanelStore,
+                              y: np.ndarray) -> np.ndarray:
+    """x with U_i x_i = y_i for every system i."""
+    x = np.asarray(y, dtype=np.float64).copy()
+    store = bstore.template
+    with _ot.span("solve_backward"):
+        for level in _solve_schedule_of(store).bwd_levels:
+            with _ot.span("bwd_level"):
+                _level_diag_solves_batch(bstore, level, x, lower=False)
+                for j in level:
+                    s, e = store.supernodes[j]
+                    above = store.rows[j][:store.diag[j]]
+                    if len(above):
+                        blk = bstore.blocks[j][:, :store.diag[j]]
+                        if x.ndim == 2:
+                            x[:, above] -= np.matmul(
+                                blk, x[:, s:e, None])[..., 0]
+                        else:
+                            x[:, above] -= np.matmul(blk, x[:, s:e])
+    return x
+
+
+def solve_factored_batch(bnum: BatchedNumericResult,
+                         b: np.ndarray) -> np.ndarray:
+    """x_i = U_i^{-1} L_i^{-1} b_i on the batched packed factors (no
+    refinement)."""
+    return backward_substitute_batch(bnum.store,
+                                     forward_substitute_batch(bnum.store, b))
+
+
+@dataclasses.dataclass
+class BatchedSolveResult:
+    """Solutions + per-system convergence histories of one ``solve_batch``.
+
+    ``x`` is (B, n) or (B, n, k); ``residuals[i]`` is system i's accepted
+    worst-column relative-residual history (same per-system lengths and
+    floats a loop of sequential ``solve`` calls would record);
+    ``refine_accepted`` the (B,) accepted-correction counts.
+    """
+
+    x: np.ndarray
+    residuals: List[List[float]]
+    num: BatchedNumericResult
+    solve_s: float
+    refine_accepted: np.ndarray
+
+    @property
+    def batch(self) -> int:
+        return self.num.batch
+
+    @property
+    def residual(self) -> np.ndarray:
+        """(B,) final per-system worst-column relative residuals."""
+        return np.array([h[-1] for h in self.residuals])
+
+    def system(self, i: int) -> SolveResult:
+        """System i repackaged as a sequential ``SolveResult`` (zero-copy
+        factor view; ``factor_s``/``solve_s`` are not split per system)."""
+        return SolveResult(x=self.x[i], residuals=list(self.residuals[i]),
+                           num=self.num.system(i), factor_s=0.0,
+                           solve_s=0.0,
+                           refine_accepted=int(self.refine_accepted[i]))
+
+
+def solve_batch(a: CSRMatrix, b: np.ndarray, values_batch: np.ndarray,
+                bnum: BatchedNumericResult, *, refine_iters: int = 2,
+                refine_tol: Optional[float] = None) -> BatchedSolveResult:
+    """Substitution + iterative refinement across all B factored systems at
+    once: ``b`` is (B, n) or (B, n, k), ``values_batch`` the (B, nnz) value
+    stack ``bnum`` was factored from (each system refines against its OWN
+    matrix).
+
+    Refinement runs the level sweeps over the whole batch each iteration
+    and masks per system: a system leaves the active set exactly when the
+    sequential loop would break (all columns at/below ``refine_tol``, or no
+    column improving), corrections are accepted per (system, column) only
+    when improving, and stopped systems' solutions are never touched — so
+    every system's x, residual history, and accepted count are
+    bitwise-identical to a loop of ``solve(..., num=num_i)`` calls.
+    """
+    t0 = time.perf_counter()
+    bsz = bnum.batch
+    b = np.asarray(b, dtype=np.float64)
+    n = bnum.n
+    if (b.ndim not in (2, 3) or b.shape[0] != bsz or b.shape[1] != n
+            or (b.ndim == 3 and b.shape[2] == 0)):
+        raise ValueError(f"b must be ({bsz}, {n}) or ({bsz}, {n}, k>=1), "
+                         f"got {b.shape}")
+    values_batch = np.asarray(values_batch, dtype=np.float64)
+    if values_batch.ndim != 2 or values_batch.shape[0] != bsz:
+        raise ValueError(f"values_batch must be ({bsz}, nnz), got "
+                         f"{values_batch.shape}")
+    if refine_tol is None:
+        refine_tol = 1e-14
+
+    def residuals_of(x):
+        # per-system _col_residuals (same norm calls as sequential solve)
+        return np.stack([
+            _col_residuals(lambda v: csr_matvec(a, values_batch[i], v),
+                           x[i], b[i], b_norms[i]) for i in range(bsz)])
+
+    b_norms = np.stack([
+        np.array([np.linalg.norm(b[i])]) if b.ndim == 2
+        else np.linalg.norm(b[i], axis=0) for i in range(bsz)])
+    b_norms = np.where(b_norms == 0.0, 1.0, b_norms)
+
+    with _ot.span("solve_batch"):
+        x = solve_factored_batch(bnum, b)
+        res_cols = residuals_of(x)                       # (B, kk)
+        histories = [[float(res_cols[i].max())] for i in range(bsz)]
+        accepted = np.zeros(bsz, dtype=np.int64)
+        stopped = np.zeros(bsz, dtype=bool)
+        for _ in range(max(0, refine_iters)):
+            at_tol = res_cols.max(axis=1) <= refine_tol
+            active = ~stopped & ~at_tol
+            stopped |= at_tol
+            if not active.any():
+                break
+            with _ot.span("refine"):
+                r = np.stack([b[i] - csr_matvec(a, values_batch[i], x[i])
+                              for i in range(bsz)])
+                x_try = x + solve_factored_batch(bnum, r)
+                res_try = residuals_of(x_try)
+                improve = (res_try < res_cols) & active[:, None]
+                any_imp = improve.any(axis=1)
+                stopped |= active & ~any_imp   # sequential's permanent break
+                if b.ndim == 2:     # vector RHS: whole-x accept per system
+                    x = np.where(any_imp[:, None], x_try, x)
+                else:               # accept only the improving columns
+                    x = np.where(improve[:, None, :], x_try, x)
+                res_cols = np.where(improve, res_try, res_cols)
+                accepted += any_imp
+                for i in np.flatnonzero(any_imp):
+                    histories[int(i)].append(float(res_cols[i].max()))
+    return BatchedSolveResult(x=x, residuals=histories, num=bnum,
+                              solve_s=time.perf_counter() - t0,
+                              refine_accepted=accepted)

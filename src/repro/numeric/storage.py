@@ -350,6 +350,23 @@ class PanelStore:
         for block, mask in zip(self.blocks, self.in_pattern):
             block[~mask] = 0.0
 
+    def system_view(self, blocks: List[np.ndarray]) -> "PanelStore":
+        """A ``PanelStore`` sharing this store's value-independent structure
+        but carrying the given ``blocks`` (typically *views* into one system
+        of a ``BatchedPanelStore``, so no values are copied).  This is how
+        the batched tier hands a single system to the per-system solve and
+        reconstruction code paths unchanged."""
+        new = PanelStore.__new__(PanelStore)
+        new.n = self.n
+        new.pattern = self.pattern
+        new.supernodes = self.supernodes
+        new.sup_of_col = self.sup_of_col
+        new.rows = self.rows
+        new.in_pattern = self.in_pattern
+        new.diag = self.diag
+        new.blocks = blocks
+        return new
+
     # -- dense reconstruction (test/oracle helpers) -------------------------
     def to_dense(self) -> np.ndarray:
         """Dense (n, n) L\\U working matrix — test helper; the factorization
@@ -366,3 +383,109 @@ class PanelStore:
         l = np.tril(m, -1) + np.eye(self.n)
         u = np.triu(m)
         return l, u
+
+
+class BatchedPanelStore:
+    """Packed CSC-panel storage for B same-pattern systems at once
+    (DESIGN.md §14): one (B, rows_J, w_J) float64 block per panel, sharing
+    one plan's value-independent structure (rows / diag / in_pattern /
+    pattern — read-only by contract) across the whole batch.
+
+    This is the storage half of the many-matrix batched tier: circuit-style
+    workloads factorize ONE sparsity pattern with thousands of value sets
+    (Newton iterations, transient sweeps, Monte Carlo corners), so the
+    batch axis is leading and every per-panel operation broadcasts over it.
+    System ``i``'s slice of every block is bitwise-identical to what a
+    standalone ``PanelStore`` holding only that system would carry —
+    ``system(i)`` exposes exactly that as zero-copy views.
+    """
+
+    def __init__(self, template: PanelStore, batch: int):
+        if batch <= 0:
+            raise ValueError(f"batch must be positive, got {batch}")
+        self.batch = batch
+        self.n = template.n
+        self.template = template
+        self.blocks: List[np.ndarray] = [
+            np.zeros((batch,) + b.shape, dtype=np.float64)
+            for b in template.blocks]
+
+    # structure accessors delegate to the shared template
+    @property
+    def supernodes(self) -> np.ndarray:
+        return self.template.supernodes
+
+    @property
+    def rows(self) -> List[np.ndarray]:
+        return self.template.rows
+
+    @property
+    def diag(self) -> np.ndarray:
+        return self.template.diag
+
+    @property
+    def in_pattern(self) -> List[np.ndarray]:
+        return self.template.in_pattern
+
+    @property
+    def n_panels(self) -> int:
+        return self.template.n_panels
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(b.nbytes for b in self.blocks))
+
+    def system(self, i: int) -> PanelStore:
+        """Zero-copy ``PanelStore`` view of system ``i`` — blocks are views
+        into the batched buffers, so per-system consumers (solve, dense
+        reconstruction, parity tests) run unchanged on batched factors."""
+        if not 0 <= i < self.batch:
+            raise IndexError(f"system {i} out of range for batch "
+                             f"{self.batch}")
+        return self.template.system_view([b[i] for b in self.blocks])
+
+    def set_csr_mapped(self, values: np.ndarray, maps: CsrScatterMaps, *,
+                       zero: bool = True) -> np.ndarray:
+        """Replay the precomputed CSR scatter for all B systems at once
+        (``values`` is (B, nnz)); per-slice bitwise-identical to
+        ``PanelStore.set_csr_mapped`` on each system.  Returns the (B,)
+        per-system largest |value| with no slot (the per-system
+        ``validate_symbolic`` contract)."""
+        values = np.asarray(values, dtype=np.float64)
+        if values.shape != (self.batch, maps.nnz):
+            raise ValueError(f"CSR values must be ({self.batch}, "
+                             f"{maps.nnz}), got {values.shape}")
+        if zero:
+            for block in self.blocks:
+                block.fill(0.0)
+        for j in range(self.n_panels):
+            lo, hi = maps.panel_ptr[j], maps.panel_ptr[j + 1]
+            if lo < hi:
+                self.blocks[j][:, maps.row_idx[lo:hi],
+                               maps.col_idx[lo:hi]] = values[:,
+                                                             maps.pos[lo:hi]]
+        if maps.missed.size:
+            return np.abs(values[:, maps.missed]).max(axis=1)
+        return np.zeros(self.batch, dtype=np.float64)
+
+    def gather_rows_mapped(self, j: int, idx: np.ndarray,
+                           hit: np.ndarray) -> np.ndarray:
+        """(B, len(idx), w_j) batched row gather — per-slice identical to
+        ``PanelStore.gather_rows_mapped`` (absent rows gather as 0.0)."""
+        out = np.zeros((self.batch, len(idx), self.blocks[j].shape[2]),
+                       dtype=np.float64)
+        out[:, hit] = self.blocks[j][:, idx[hit]]
+        return out
+
+    def padding_max(self) -> np.ndarray:
+        """(B,) per-system largest |value| on a padded slot."""
+        worst = np.zeros(self.batch, dtype=np.float64)
+        for block, mask in zip(self.blocks, self.in_pattern):
+            pad = block[:, ~mask]
+            if pad.shape[1]:
+                np.maximum(worst, np.abs(pad).max(axis=1), out=worst)
+        return worst
+
+    def zero_padding(self) -> None:
+        for block, mask in zip(self.blocks, self.in_pattern):
+            block[:, ~mask] = 0.0

@@ -53,13 +53,13 @@ import numpy as np
 from scipy.linalg import solve_triangular
 
 from repro.numeric.schedule import PanelSchedule, build_panel_maps, build_schedule
-from repro.numeric.storage import CSCPattern, PanelStore
+from repro.numeric.storage import BatchedPanelStore, CSCPattern, PanelStore
 from repro.obs import metrics as _om
 from repro.obs import trace as _ot
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import (
-    check_pivot, generic_values, generic_values_csr, lu_inplace,
-    pivot_tolerance,
+    check_pivot, generic_values_csr, lu_inplace,
+    lu_inplace_batched, pivot_tolerance,
 )
 
 _BACKENDS = ("numpy", "kernel")
@@ -476,6 +476,274 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
                          elapsed_s=time.perf_counter() - t0,
                          n_updates=n_updates, gemm_flops=gemm_flops,
                          outside_max=outside_max)
+
+
+@dataclasses.dataclass
+class BatchedNumericResult:
+    """Factors of B same-pattern value sets in one ``BatchedPanelStore``
+    (DESIGN.md §14).
+
+    ``n_updates``/``gemm_flops`` are *per system* — the sweep structure is
+    value-independent, so every system does identical work and the numbers
+    match what a standalone ``factor_on_store`` of any one system reports.
+    ``outside_max`` is the (B,) per-system escape check.  ``system(i)``
+    wraps system i's zero-copy store view as a plain ``NumericResult`` so
+    per-system consumers (solve, dense oracle reconstruction, parity
+    tests) run unchanged on batched factors.
+    """
+
+    n: int
+    batch: int
+    store: BatchedPanelStore
+    schedule: PanelSchedule
+    backend: str
+    elapsed_s: float
+    n_updates: int               # ancestor panel updates, per system
+    gemm_flops: int              # trailing-GEMM flops, per system
+    outside_max: np.ndarray      # (B,) largest |value| outside the pattern
+
+    @property
+    def n_supernodes(self) -> int:
+        return self.schedule.n_panels
+
+    @property
+    def n_levels(self) -> int:
+        return self.schedule.n_levels
+
+    def system(self, i: int) -> NumericResult:
+        return NumericResult(n=self.n, store=self.store.system(i),
+                             schedule=self.schedule, backend=self.backend,
+                             elapsed_s=0.0, n_updates=self.n_updates,
+                             gemm_flops=self.gemm_flops,
+                             outside_max=float(self.outside_max[i]))
+
+
+def _panel_prepare_batched(bstore: BatchedPanelStore,
+                           schedule: PanelSchedule, j: int, maps=None):
+    """``_panel_prepare`` broadcast over the system axis of a
+    ``BatchedPanelStore``: one gather / rank-update pass serves all B
+    systems.  Gathers and rank updates are batched (fancy indexing and
+    stacked ``np.matmul`` are per-slice bitwise-identical to their 2D
+    forms); the per-ancestor unit-lower solves stay per-system LAPACK
+    calls, so every float op matches ``_panel_prepare`` on that system
+    alone — the batched tier's conformance contract (DESIGN.md §14).
+
+    Returns (lp (B, M, K), b (B, K, w), dropped (B,), flops-per-system).
+    """
+    s, e = schedule.supernodes[j]
+    w = e - s
+    anc = schedule.ancestors[j]
+    block = bstore.blocks[j]
+    d = int(bstore.diag[j])
+    bsz = bstore.batch
+    if not len(anc):
+        return None, None, np.zeros(bsz, dtype=np.float64), 0
+    if maps is None:
+        maps = build_panel_maps(bstore.template, schedule, j)
+    offs = maps.offs
+    anc_rows = maps.anc_rows
+
+    b = bstore.gather_rows_mapped(j, maps.idx_j, maps.hit_j)  # (B, K, w)
+    for idx, k in enumerate(anc):
+        r0, r1 = offs[idx], offs[idx + 1]
+        strip = bstore.gather_rows_mapped(int(k), *maps.strip_maps[idx])
+        if r1 - r0 > 1:           # 1-row solves are identity (unit lower)
+            head = strip[:, :r1 - r0]
+            for i in range(bsz):
+                b[i, r0:r1] = solve_triangular(head[i], b[i, r0:r1],
+                                               lower=True,
+                                               unit_diagonal=True,
+                                               check_finite=False)
+        if r1 < len(anc_rows):
+            b[:, r1:] -= np.matmul(strip[:, r1 - r0:], b[:, r0:r1])
+    idx_j, hit_j = maps.idx_j, maps.hit_j         # solved U(anc, J)
+    block[:, idx_j[hit_j]] = b[:, hit_j]
+    dropped = np.zeros(bsz, dtype=np.float64)
+    if not hit_j.all():
+        miss = b[:, ~hit_j]
+        if miss.size:
+            dropped = np.abs(miss.reshape(bsz, -1)).max(axis=1)
+
+    below = bstore.rows[j][d:]
+    lp = np.empty((bsz, len(below), len(anc_rows)), dtype=np.float64)
+    for idx, k in enumerate(anc):
+        lp[:, :, offs[idx]:offs[idx + 1]] = bstore.gather_rows_mapped(
+            int(k), *maps.below_maps[idx])
+    flops = 2 * len(below) * len(anc_rows) * w
+    return lp, b, dropped, flops
+
+
+def _panel_finish_batched(bstore: BatchedPanelStore,
+                          schedule: PanelSchedule, j: int,
+                          piv_tol: np.ndarray) -> None:
+    """``_panel_finish`` over the system axis: elementwise batched
+    diagonal LU (``lu_inplace_batched``) + per-system LAPACK below-panel
+    solves; ``piv_tol`` is the (B,) per-system threshold."""
+    s, e = schedule.supernodes[j]
+    w = e - s
+    block = bstore.blocks[j]
+    d = int(bstore.diag[j])
+    lu_inplace_batched(block[:, d:d + w], piv_tol, col0=s)
+    if block.shape[1] > d + w:
+        diag = block[:, d:d + w]
+        for i in range(bstore.batch):
+            block[i, d + w:] = _solve_upper_right(diag[i], block[i, d + w:])
+
+
+def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
+                          bstore: BatchedPanelStore,
+                          schedule: PanelSchedule, *,
+                          backend: str = "numpy",
+                          piv_tol: Optional[float] = None,
+                          check_pattern: bool = True,
+                          pattern_tol: Optional[float] = None,
+                          maps=None, csr_maps=None,
+                          store_is_zeroed: bool = False
+                          ) -> BatchedNumericResult:
+    """``factor_on_store`` vmapped over B same-pattern value sets
+    (DESIGN.md §14): scatter the (B, nnz) CSR-aligned stack into the
+    batched store and run ONE level-scheduled sweep whose every per-panel
+    operation carries a leading system axis.
+
+    System i's factors are **bitwise-identical** to
+    ``factor_on_store(a, values_batch[i], ...)`` on a standalone store:
+    gathers/scatters and the trailing GEMMs broadcast over the batch
+    (per-slice ``np.matmul`` parity on CPU, per-slice grid parity of the
+    stacked Pallas dispatch on the kernel backend), the diagonal LU is the
+    elementwise ``lu_inplace_batched``, and the triangular solves stay
+    per-system LAPACK calls.  Pivot tolerance, the pattern-escape check,
+    and ``ZeroPivotError`` are all per system (``piv_tol=None`` derives
+    each system's threshold from its own value scale).
+
+    Same-shape panels of a level additionally stack across the batch into
+    one (panels x B)-deep GEMM dispatch — the within-plan segment batching
+    of DESIGN.md §13 composed with the system axis.  Only CSR-aligned
+    (B, nnz) values are supported (the batch tier is the refactorization
+    server path; dense (n, n) stacks would defeat its memory point).
+    """
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
+    n = bstore.n
+    bsz = bstore.batch
+    if pattern_tol is None:
+        pattern_tol = 1e-4 if backend == "kernel" else 1e-8
+    t0 = time.perf_counter()
+
+    values_batch = np.asarray(values_batch, dtype=np.float64)
+    if csr_maps is None:
+        if a is None:
+            raise ValueError(
+                "batched CSR values need the matrix `a` or precomputed "
+                "`csr_maps` to locate their slots")
+        csr_maps = bstore.template.csr_maps(a)
+    if values_batch.shape != (bsz, csr_maps.nnz):
+        raise ValueError(
+            f"values_batch must be ({bsz}, {csr_maps.nnz}) CSR-aligned, "
+            f"got {values_batch.shape}")
+    with _ot.span("scatter_values"):
+        input_outside = bstore.set_csr_mapped(values_batch, csr_maps,
+                                              zero=not store_is_zeroed)
+
+    scale = (np.abs(values_batch).max(axis=1) if values_batch.size
+             else np.zeros(bsz, dtype=np.float64))
+    if piv_tol is None:
+        # vectorized pivot_tolerance: eps at each system's own value scale
+        piv_tol_sys = np.finfo(np.float64).eps * np.maximum(scale, 0.0)
+    else:
+        piv_tol_sys = np.full(bsz, float(piv_tol))
+
+    n_updates = 0
+    gemm_flops = 0
+    dropped_max = input_outside.copy()
+    obs_on = _ot.ENABLED
+    sweep_t0 = time.perf_counter() if obs_on else 0.0
+    batched_calls = 0
+    batched_panels = 0
+    for level in schedule.levels:
+        with _ot.span("factor_level"):
+            operands = {}
+            groups: dict = {}
+            for j in level:
+                j = int(j)
+                lp, b, dropped, flops = _panel_prepare_batched(
+                    bstore, schedule, j,
+                    maps=maps[j] if maps is not None else None)
+                n_updates += len(schedule.ancestors[j])
+                gemm_flops += flops
+                np.maximum(dropped_max, dropped, out=dropped_max)
+                if lp is None:
+                    continue
+                operands[j] = (lp, b)
+                groups.setdefault(lp.shape[1:] + (b.shape[2],), []).append(j)
+
+            for (m, k, w), js in groups.items():
+                if len(js) == 1:
+                    # one panel, B systems: the (B, ., .) stack IS the batch
+                    j = js[0]
+                    lp, b = operands[j]
+                    d = int(bstore.diag[j])
+                    acc = bstore.blocks[j][:, d:]
+                    if backend == "kernel":
+                        from repro.kernels import ops as kops
+
+                        upd = np.asarray(
+                            kops.panel_update_systems(acc, lp, b),
+                            dtype=np.float64)
+                    else:
+                        upd = acc - np.matmul(lp, b)
+                    bstore.blocks[j][:, d:] = upd
+                    continue
+                # same-shape panel group x system batch: one stacked dispatch
+                accs = np.concatenate(
+                    [bstore.blocks[j][:, int(bstore.diag[j]):] for j in js])
+                lps = np.concatenate([operands[j][0] for j in js])
+                bs = np.concatenate([operands[j][1] for j in js])
+                if backend == "kernel":
+                    from repro.kernels import ops as kops
+
+                    upds = np.asarray(
+                        kops.panel_update_systems(accs, lps, bs),
+                        dtype=np.float64)
+                else:
+                    upds = accs - np.matmul(lps, bs)
+                for gi, j in enumerate(js):
+                    d = int(bstore.diag[j])
+                    bstore.blocks[j][:, d:] = upds[gi * bsz:(gi + 1) * bsz]
+                batched_calls += 1
+                batched_panels += len(js)
+                if obs_on:
+                    reg = _om.registry()
+                    reg.count("gemm.batched.flops",
+                              2 * len(js) * bsz * m * k * w)
+                    reg.count("gemm.batched.bytes",
+                              8 * len(js) * bsz * (m * k + k * w + 2 * m * w))
+
+            for j in level:
+                _panel_finish_batched(bstore, schedule, int(j), piv_tol_sys)
+    if obs_on:
+        reg = _om.registry()
+        if batched_calls:
+            reg.count("gemm.batched.calls", batched_calls)
+            reg.count("gemm.batched.panels", batched_panels)
+        reg.count("gemm.flops", gemm_flops * bsz)
+        reg.count("gemm.seconds", time.perf_counter() - sweep_t0)
+
+    outside_max = np.maximum(bstore.padding_max(), dropped_max)
+    bad = outside_max > pattern_tol * scale
+    if check_pattern and bad.any():
+        i = int(np.flatnonzero(bad)[0])
+        raise ValueError(
+            f"numeric factorization escaped the symbolic prediction: "
+            f"system {i} has |{outside_max[i]:.3e}| outside the pattern "
+            f"(tol {pattern_tol * scale[i]:.3e}) — symbolic "
+            f"under-prediction")
+    bstore.zero_padding()
+
+    return BatchedNumericResult(n=n, batch=bsz, store=bstore,
+                                schedule=schedule, backend=backend,
+                                elapsed_s=time.perf_counter() - t0,
+                                n_updates=n_updates, gemm_flops=gemm_flops,
+                                outside_max=outside_max)
 
 
 def numeric_factorize(a: CSRMatrix, sym=None, *,

@@ -1,0 +1,23 @@
+"""Serving front end for the plan/factor session API (DESIGN.md §14).
+
+``SolverEngine`` keeps a fingerprint-keyed LRU cache of ``LUPlan`` analyses
+and packs queued (structure, values, rhs) requests into fixed-shape batched
+``factorize_batch``/``solve_batch`` dispatches — the continuous-batching
+serving loop of ``launch/serve.py`` on sparse LU instead of LM decode::
+
+    from repro.serve import SolverEngine
+
+    eng = SolverEngine(repro.LUOptions(supernode_relax=2), batch_slots=16)
+    rids = [eng.submit(a, vals, rhs) for vals, rhs in requests]
+    results = eng.flush()          # one batched sweep per pattern chunk
+
+Per-request results are bitwise-identical to the sequential
+``analyze``/``factorize``/``solve`` calls.
+"""
+from repro.serve.cache import PatternKey, PlanCache, pattern_fingerprint
+from repro.serve.engine import ServeRequest, ServeResult, SolverEngine
+
+__all__ = [
+    "PatternKey", "PlanCache", "pattern_fingerprint",
+    "ServeRequest", "ServeResult", "SolverEngine",
+]

@@ -1,0 +1,206 @@
+"""Long-lived solver engine: plan cache + fixed-shape batched dispatch
+(DESIGN.md §14).
+
+The production shape of a symbolic-factorization-amortizing solver is a
+*service*: requests carrying (structure, values, rhs) arrive continuously,
+most share one of a handful of sparsity patterns (circuit simulation:
+Newton iterations / transient sweeps / Monte Carlo corners over one
+netlist), and the engine's job is to (a) never re-analyze a pattern it has
+seen, and (b) never pay per-request sweep overhead when requests can share
+one batched sweep.
+
+This is the continuous-batching idiom of the LM serving driver
+(``launch/serve.py``) transplanted onto the ``LUPlan`` session API:
+
+* **Plan cache** — ``pattern_fingerprint`` content-hashes each request's
+  structure; hits reuse the cached ``LUPlan`` (an O(1) dict probe vs a full
+  symbolic analysis), misses analyze once and insert with LRU eviction.
+* **Fixed-shape slots** — requests sharing (pattern, rhs shape) are packed
+  into ``batch_slots``-wide chunks; the final partial chunk is padded by
+  repeating its last request, so every dispatch sees the same (B, nnz) /
+  (B, n) shapes — the jit signature never changes as requests arrive or
+  finish (the LM engine's resident-decode-batch policy; padded slots are
+  computed and discarded).
+* **Observability** — ``serve.cache.{hit,miss,evict}`` counters,
+  ``serve.batch_occupancy`` (real requests / slots per dispatch), and a
+  ``serve`` span around every flush, all gated on ``obs`` tracing being
+  enabled; ``engine.stats`` keeps always-on Python-level totals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api import LUOptions, LUPlan, analyze
+from repro.obs import metrics as _om
+from repro.obs import trace as _ot
+from repro.serve.cache import PatternKey, PlanCache, pattern_fingerprint
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One queued (structure, values, rhs) solve request."""
+
+    rid: int
+    key: PatternKey
+    a: object                    # CSRMatrix (first-seen per pattern wins)
+    values: np.ndarray           # (nnz,) CSR-aligned
+    b: np.ndarray                # (n,) or (n, k)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request outcome: the solution, its final relative residual,
+    whether the plan came from cache, and which batched dispatch (and
+    slot) computed it."""
+
+    rid: int
+    x: np.ndarray
+    residual: float
+    cache_hit: bool
+    batch_id: int
+    slot: int
+
+
+class SolverEngine:
+    """Long-lived serving front end over the plan/factor session API.
+
+    >>> eng = SolverEngine(LUOptions(supernode_relax=2), capacity=8,
+    ...                    batch_slots=16)
+    >>> eng.submit(a, values, b)          # -> request id
+    >>> results = eng.flush()             # batched factorize + solve
+    >>> eng.solve(a, values, b)           # submit + flush one request
+
+    Results are bitwise-identical to calling
+    ``analyze(a).factorize(values).solve(b)`` per request — batching and
+    slot padding change scheduling only, never a float op (the batched
+    tier's conformance contract).
+    """
+
+    def __init__(self, options: Optional[LUOptions] = None, *,
+                 capacity: int = 8, batch_slots: int = 16):
+        if batch_slots <= 0:
+            raise ValueError(
+                f"batch_slots must be positive, got {batch_slots}")
+        self.options = options if options is not None else LUOptions()
+        self.cache = PlanCache(capacity)
+        self.batch_slots = batch_slots
+        self._queue: List[ServeRequest] = []
+        self._hit_rids: set = set()
+        self._next_rid = 0
+        self._next_batch = 0
+        self.stats: Dict[str, float] = {
+            "requests": 0, "cache_hits": 0, "cache_misses": 0,
+            "cache_evictions": 0, "batches": 0, "padded_slots": 0,
+            "analyze_s": 0.0, "factor_s": 0.0, "solve_s": 0.0,
+        }
+
+    # -- plan cache ---------------------------------------------------------
+    def plan_for(self, a) -> LUPlan:
+        """The plan for ``a``'s pattern: cache hit (O(1) content-hash
+        probe) or a full ``analyze`` inserted with LRU eviction."""
+        return self._plan_for(a, pattern_fingerprint(a))[0]
+
+    def _plan_for(self, a, key: PatternKey):
+        plan = self.cache.get(key)
+        if plan is not None:
+            self.stats["cache_hits"] += 1
+            if _ot.ENABLED:
+                _om.registry().count("serve.cache.hit")
+            return plan, True
+        self.stats["cache_misses"] += 1
+        if _ot.ENABLED:
+            _om.registry().count("serve.cache.miss")
+        t0 = time.perf_counter()
+        plan = analyze(a, self.options)
+        self.stats["analyze_s"] += time.perf_counter() - t0
+        if self.cache.put(key, plan) is not None:
+            self.stats["cache_evictions"] += 1
+            if _ot.ENABLED:
+                _om.registry().count("serve.cache.evict")
+        return plan, False
+
+    # -- request queue ------------------------------------------------------
+    def submit(self, a, values: np.ndarray, b: np.ndarray) -> int:
+        """Queue one solve of ``values`` (CSR-aligned (nnz,)) / rhs ``b``
+        ((n,) or (n, k)) on ``a``'s structure; returns the request id used
+        to match ``flush`` results."""
+        values = np.asarray(values, dtype=np.float64)
+        b = np.asarray(b, dtype=np.float64)
+        if values.shape != (a.nnz,):
+            raise ValueError(f"values must be CSR-aligned ({a.nnz},), got "
+                             f"{values.shape}")
+        if b.ndim not in (1, 2) or b.shape[0] != a.n:
+            raise ValueError(f"b must be ({a.n},) or ({a.n}, k), got "
+                             f"{b.shape}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(ServeRequest(rid=rid, key=pattern_fingerprint(a),
+                                        a=a, values=values, b=b))
+        self.stats["requests"] += 1
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> List[ServeResult]:
+        """Run every queued request through batched dispatches and return
+        results in submission order.
+
+        Requests are grouped by (pattern key, rhs shape); each group is cut
+        into ``batch_slots``-wide chunks, the last chunk padded by
+        repeating its final request (fixed-shape policy — padded slots are
+        real solves whose outputs are dropped).  Each chunk is ONE
+        ``factorize_batch`` + ``solve_batch`` pair.
+        """
+        queue, self._queue = self._queue, []
+        if not queue:
+            return []
+        results: Dict[int, ServeResult] = {}
+        groups: "Dict[tuple, List[ServeRequest]]" = {}
+        for req in queue:
+            groups.setdefault((req.key, req.b.shape), []).append(req)
+        with _ot.span("serve"):
+            for (key, _shape), reqs in groups.items():
+                plan, hit = self._plan_for(reqs[0].a, key)
+                for lo in range(0, len(reqs), self.batch_slots):
+                    chunk = reqs[lo:lo + self.batch_slots]
+                    self._dispatch(plan, key, chunk, hit, results)
+        return [results[req.rid] for req in queue]
+
+    def _dispatch(self, plan: LUPlan, key: PatternKey,
+                  chunk: List[ServeRequest], cache_hit: bool,
+                  results: Dict[int, ServeResult]) -> None:
+        pad = self.batch_slots - len(chunk)
+        padded = chunk + [chunk[-1]] * pad
+        values = np.stack([r.values for r in padded])
+        b = np.stack([r.b for r in padded])
+        batch_id = self._next_batch
+        self._next_batch += 1
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += pad
+        if _ot.ENABLED:
+            _om.registry().observe("serve.batch_occupancy",
+                                   len(chunk) / self.batch_slots)
+        t0 = time.perf_counter()
+        factor = plan.factorize_batch(values)
+        t1 = time.perf_counter()
+        solved = factor.solve_batch(b)
+        self.stats["factor_s"] += t1 - t0
+        self.stats["solve_s"] += time.perf_counter() - t1
+        for slot, req in enumerate(chunk):
+            results[req.rid] = ServeResult(
+                rid=req.rid, x=np.asarray(solved.x[slot]),
+                residual=float(solved.residuals[slot][-1]),
+                cache_hit=cache_hit, batch_id=batch_id, slot=slot)
+
+    # -- one-shot convenience ----------------------------------------------
+    def solve(self, a, values: np.ndarray, b: np.ndarray) -> ServeResult:
+        """Submit one request and flush immediately (occupancy 1/slots —
+        batch real workloads via ``submit`` + ``flush``)."""
+        rid = self.submit(a, values, b)
+        return next(r for r in self.flush() if r.rid == rid)

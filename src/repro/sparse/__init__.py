@@ -2,7 +2,9 @@
 
 This subpackage is host-side (numpy/scipy) infrastructure feeding the JAX core.
 """
-from repro.sparse.csr import CSRMatrix, csr_from_coo, csr_from_dense, csr_to_ell, transpose_csr
+from repro.sparse.csr import (
+    CSRMatrix, csr_from_coo, csr_from_dense, csr_to_ell, transpose_csr,
+)
 from repro.sparse.matrices import (
     grid2d_laplacian,
     grid3d_laplacian,

@@ -39,7 +39,8 @@ class CSRMatrix:
         return dense
 
     def struct_symmetry(self) -> float:
-        """Fraction of off-diagonal nonzeros whose transpose position is also nonzero."""
+        """Fraction of off-diagonal nonzeros whose transpose position is
+        also nonzero."""
         d = self.to_dense()
         np.fill_diagonal(d, False)
         total = int(d.sum())
@@ -58,7 +59,8 @@ class CSRMatrix:
             assert np.all(np.diff(r) > 0), f"row {i} not strictly sorted"
 
 
-def csr_from_coo(n: int, rows: np.ndarray, cols: np.ndarray, *, drop_diagonal: bool = False) -> CSRMatrix:
+def csr_from_coo(n: int, rows: np.ndarray, cols: np.ndarray, *,
+                 drop_diagonal: bool = False) -> CSRMatrix:
     """Build a deduplicated, row-sorted structural CSR from COO index lists."""
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
@@ -120,10 +122,12 @@ def union_csr(a: CSRMatrix, b: CSRMatrix) -> CSRMatrix:
     ra = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
     rb = np.repeat(np.arange(b.n, dtype=np.int64), np.diff(b.indptr))
     return csr_from_coo(a.n, np.concatenate([ra, rb]),
-                        np.concatenate([a.indices.astype(np.int64), b.indices.astype(np.int64)]))
+                        np.concatenate([a.indices.astype(np.int64),
+                                        b.indices.astype(np.int64)]))
 
 
-def dense_block_adjacency(a: CSRMatrix, block: int, *, transpose: bool = True) -> np.ndarray:
+def dense_block_adjacency(a: CSRMatrix, block: int, *,
+                          transpose: bool = True) -> np.ndarray:
     """Dense (n_pad, n_pad) uint8 adjacency, padded up to a multiple of ``block``.
 
     ``adj[u, v] == 1`` iff edge u -> v (in the *original* orientation when

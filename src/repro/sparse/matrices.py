@@ -8,7 +8,7 @@ maps the paper's dataset codes to scaled-down analogues with the same character.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Dict
 
 import numpy as np
 
@@ -16,8 +16,10 @@ from repro.sparse.csr import CSRMatrix, csr_from_coo
 
 
 def _with_diagonal(n: int, rows, cols):
-    rows = np.concatenate([np.asarray(rows, dtype=np.int64), np.arange(n, dtype=np.int64)])
-    cols = np.concatenate([np.asarray(cols, dtype=np.int64), np.arange(n, dtype=np.int64)])
+    rows = np.concatenate([np.asarray(rows, dtype=np.int64),
+                           np.arange(n, dtype=np.int64)])
+    cols = np.concatenate([np.asarray(cols, dtype=np.int64),
+                           np.arange(n, dtype=np.int64)])
     return rows, cols
 
 
@@ -36,7 +38,8 @@ def grid2d_laplacian(nx: int, ny: int | None = None) -> CSRMatrix:
     return csr_from_coo(nx * ny, rows, cols)
 
 
-def grid3d_laplacian(nx: int, ny: int | None = None, nz: int | None = None) -> CSRMatrix:
+def grid3d_laplacian(nx: int, ny: int | None = None,
+                     nz: int | None = None) -> CSRMatrix:
     """7-point stencil — CFD/electromagnetics analogue (RM, DI)."""
     ny = ny or nx
     nz = nz or nx
@@ -76,7 +79,8 @@ def circuit_like(n: int, *, avg_deg: float = 4.0, hub_fraction: float = 0.002,
     return csr_from_coo(n, rows, cols)
 
 
-def economic_like(n: int, *, block: int = 32, coupling: float = 3.0, seed: int = 0) -> CSRMatrix:
+def economic_like(n: int, *, block: int = 32, coupling: float = 3.0,
+                  seed: int = 0) -> CSRMatrix:
     """Economic-modelling analogue (G7, MK): highly *asymmetric* block couplings
     (struct. symm ~0.03-0.07 in Table I)."""
     rng = np.random.default_rng(seed)
@@ -174,7 +178,8 @@ def bordered_block_diagonal(n: int, *, block: int = 16, border: int = 64,
     return csr_from_coo(n, rows, cols)
 
 
-def banded_random(n: int, *, band: int = 8, fill: float = 0.5, seed: int = 0) -> CSRMatrix:
+def banded_random(n: int, *, band: int = 8, fill: float = 0.5,
+                  seed: int = 0) -> CSRMatrix:
     rng = np.random.default_rng(seed)
     m = int(n * band * fill)
     rows = rng.integers(0, n, size=m)
@@ -194,15 +199,20 @@ PAPER_DATASETS: Dict[str, tuple] = {
     "EP": (grid2d_laplacian, dict(nx=36, ny=28), "thermal analogue of EPB2"),
     "G7": (economic_like, dict(n=1536, seed=7), "economic analogue of G7JAC200SC"),
     "LH": (chemical_like, dict(n=1800, seed=3), "chem-eng analogue of LHR71C"),
-    "MK": (economic_like, dict(n=1280, block=16, seed=11), "economic analogue of MARK3JAC140SC"),
+    "MK": (economic_like, dict(n=1280, block=16, seed=11),
+           "economic analogue of MARK3JAC140SC"),
     "RM": (grid3d_laplacian, dict(nx=11), "CFD analogue of RMA10"),
     "AU": (grid3d_laplacian, dict(nx=13), "structural analogue of AUDIKW_1"),
-    "DI": (grid3d_laplacian, dict(nx=12, ny=12, nz=10), "EM analogue of DIELFILTERV2REAL"),
+    "DI": (grid3d_laplacian, dict(nx=12, ny=12, nz=10),
+           "EM analogue of DIELFILTERV2REAL"),
     "G3": (circuit_like, dict(n=2048, seed=5), "circuit analogue of G3_CIRCUIT"),
-    "HM": (circuit_like, dict(n=2048, avg_deg=2.0, seed=9), "circuit analogue of HAMRLE3"),
+    "HM": (circuit_like, dict(n=2048, avg_deg=2.0, seed=9),
+           "circuit analogue of HAMRLE3"),
     "PR": (circuit_like, dict(n=1600, hub_deg=96, seed=13), "circuit analogue of PRE2"),
-    "ST": (grid3d_laplacian, dict(nx=12, ny=11, nz=11), "bioengineering analogue of STOMACH"),
-    "TT": (circuit_like, dict(n=1200, avg_deg=5.0, seed=17), "circuit analogue of TWOTONE"),
+    "ST": (grid3d_laplacian, dict(nx=12, ny=11, nz=11),
+           "bioengineering analogue of STOMACH"),
+    "TT": (circuit_like, dict(n=1200, avg_deg=5.0, seed=17),
+           "circuit analogue of TWOTONE"),
 }
 
 

@@ -114,6 +114,32 @@ def lu_inplace(m: np.ndarray, piv_tol: float, *, col0: int = 0) -> None:
             m[t + 1:, t + 1:] -= np.outer(m[t + 1:, t], m[t, t + 1:])
 
 
+def lu_inplace_batched(m: np.ndarray, piv_tol: np.ndarray, *,
+                       col0: int = 0) -> None:
+    """``lu_inplace`` broadcast over a leading batch axis: ``m`` is
+    (B, w, w), one same-structure diagonal block per system, ``piv_tol``
+    the (B,) per-system pivot threshold.  Every float op is elementwise
+    (scale + outer-product update), so each slice is bitwise-identical to
+    ``lu_inplace`` on that system alone — the batched tier's conformance
+    contract (DESIGN.md §14).
+
+    Pivots are checked for every system at every column; the first failing
+    (column, system) raises the same ``ZeroPivotError`` the per-system
+    sweep would.
+    """
+    w = m.shape[1]
+    for t in range(w):
+        piv = m[:, t, t]
+        bad = ~np.isfinite(piv) | (np.abs(piv) <= piv_tol)
+        if bad.any():
+            i = int(np.flatnonzero(bad)[0])
+            raise ZeroPivotError(col0 + t, piv[i], piv_tol[i])
+        if t < w - 1:
+            m[:, t + 1:, t] /= piv[:, None]
+            m[:, t + 1:, t + 1:] -= (m[:, t + 1:, t, None]
+                                     * m[:, t, None, t + 1:])
+
+
 def lu_nopivot(dense: np.ndarray, *,
                piv_tol: float | None = None) -> Tuple[np.ndarray, np.ndarray]:
     """Plain right-looking LU without pivoting. Returns (L with unit diag, U).

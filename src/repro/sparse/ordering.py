@@ -38,7 +38,8 @@ def rcm_order(a: CSRMatrix) -> np.ndarray:
 
 
 def permute_csr(a: CSRMatrix, perm: np.ndarray) -> CSRMatrix:
-    """Symmetric permutation: B = P A P^T, with B[new_i, new_j] = A[perm[new_i], perm[new_j]]."""
+    """Symmetric permutation: B = P A P^T, with
+    B[new_i, new_j] = A[perm[new_i], perm[new_j]]."""
     inv = np.empty_like(perm)
     inv[perm] = np.arange(a.n, dtype=np.int64)
     rows = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))

@@ -47,5 +47,6 @@ def compress_decompress(grads, err):
 
     pairs = jax.tree.map(one, grads, err)
     deq = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
-    new_err = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
     return deq, new_err

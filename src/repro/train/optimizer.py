@@ -40,8 +40,12 @@ def schedule(acfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init_adamw(params) -> Dict:
-    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
-    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    def f32(t):
+        return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+    def zeros(t):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+
     return {"master": f32(params), "m": zeros(params), "v": zeros(params),
             "count": jnp.zeros((), jnp.int32)}
 

@@ -31,7 +31,6 @@ from contextlib import contextmanager
 from typing import Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

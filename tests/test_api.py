@@ -322,9 +322,9 @@ def test_pattern_collector_idempotent_redelivery():
 
 
 def test_version_and_exports():
-    assert repro.__version__ == "1.4.0"
+    assert repro.__version__ == "1.5.0"
     for name in ("analyze", "LUOptions", "LUPlan", "LUFactorization",
-                 "PanelPlacement"):
+                 "BatchedLUFactorization", "SolverEngine", "PanelPlacement"):
         assert name in repro.__all__
         assert getattr(repro, name) is not None
     assert repro.analyze is analyze

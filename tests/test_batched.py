@@ -1,0 +1,178 @@
+"""Batched execution tier (ISSUE 8 / DESIGN.md §14).
+
+Contract: ``plan.factorize_batch`` / ``factor.solve_batch`` are pure
+scheduling changes — every per-system factor block, solution, refinement
+history, and accepted-iteration count is **bitwise-identical** to running
+the sequential ``plan.factorize(values[i])`` / ``factor.solve(b[i])`` loop,
+on every matrix generator, for vector and multi-RHS right-hand sides.
+Error behaviour (shape validation, zero pivots, pattern escapes) must name
+the offending system, and batched results round-trip through the zero-copy
+``system(i)`` views.
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import BatchedLUFactorization, LUOptions, analyze
+from repro.sparse import (
+    banded_full, banded_random, bordered_block_diagonal, chemical_like,
+    circuit_like, economic_like, grid2d_laplacian, grid3d_laplacian,
+    permute_csr, random_pattern, rcm_order,
+)
+from repro.sparse.numeric import ZeroPivotError, generic_values_csr
+
+# every generator in sparse/matrices.py, at n <= 1024 (test_api.py sizes)
+GENERATORS = {
+    "grid2d": lambda: grid2d_laplacian(14),
+    "grid3d": lambda: grid3d_laplacian(6),
+    "circuit": lambda: circuit_like(300, seed=7),
+    "economic": lambda: economic_like(256, block=16, seed=2),
+    "chemical": lambda: chemical_like(320, stage=16, seed=3),
+    "banded": lambda: banded_random(240, band=6, seed=4),
+    "banded_full": lambda: banded_full(200, band=5),
+    "random": lambda: random_pattern(160, density=0.02, seed=5),
+    "bbd": lambda: bordered_block_diagonal(512, block=16, border=32, seed=6),
+}
+
+OPTS = LUOptions(concurrency=64, supernode_relax=2)
+BATCH = 4
+
+
+def _matrix(name):
+    a = GENERATORS[name]()
+    return permute_csr(a, rcm_order(a))
+
+
+@pytest.fixture(scope="module")
+def plans():
+    """One analysis per generator, shared across the property tests."""
+    return {name: analyze(_matrix(name), OPTS) for name in GENERATORS}
+
+
+def _values_batch(a, batch=BATCH):
+    return np.stack([generic_values_csr(a, seed=s) for s in range(batch)])
+
+
+# ---------------------------------------------------------------------------
+# property: factorize_batch == loop of plan.factorize, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_factorize_batch_bitwise_matches_loop(name, plans):
+    plan = plans[name]
+    vb = _values_batch(plan.a)
+    bf = plan.factorize_batch(vb)
+    assert isinstance(bf, BatchedLUFactorization)
+    assert bf.batch == BATCH and bf.n == plan.n
+    for i in range(BATCH):
+        seq = plan.factorize(vb[i])
+        for blk_seq, blk_bat in zip(seq.num.store.blocks,
+                                    bf.store.blocks):
+            assert np.array_equal(blk_seq, blk_bat[i])
+
+
+# ---------------------------------------------------------------------------
+# property: solve_batch == loop of factor.solve, bitwise — (B, n) & (B, n, k)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_solve_batch_vector_bitwise_matches_loop(name, plans):
+    plan = plans[name]
+    vb = _values_batch(plan.a)
+    bf = plan.factorize_batch(vb)
+    rhs = np.random.default_rng(1).standard_normal((BATCH, plan.n))
+    solved = bf.solve_batch(rhs)
+    for i in range(BATCH):
+        seq = plan.factorize(vb[i]).solve(rhs[i])
+        assert np.array_equal(seq.x, solved.x[i])
+        assert seq.residuals == solved.residuals[i]
+    assert solved.residual.shape == (BATCH,)
+    assert float(solved.residual.max()) < 1e-10
+
+
+@pytest.mark.parametrize("name", ["grid2d", "circuit", "bbd"])
+def test_solve_batch_multirhs_bitwise_matches_loop(name, plans):
+    plan = plans[name]
+    vb = _values_batch(plan.a)
+    bf = plan.factorize_batch(vb)
+    rhs = np.random.default_rng(2).standard_normal((BATCH, plan.n, 3))
+    solved = bf.solve_batch(rhs)
+    for i in range(BATCH):
+        seq = plan.factorize(vb[i]).solve(rhs[i])
+        assert np.array_equal(seq.x, solved.x[i])
+        assert seq.residuals == solved.residuals[i]
+
+
+def test_refinement_parity_when_disabled(plans):
+    """refine_tol=0.0 keeps iterating on both paths; histories and
+    accepted counts must still agree per system."""
+    plan = plans["circuit"]
+    vb = _values_batch(plan.a)
+    bf = plan.factorize_batch(vb)
+    rhs = np.random.default_rng(3).standard_normal((BATCH, plan.n))
+    solved = bf.solve_batch(rhs, refine_iters=3, refine_tol=0.0)
+    for i in range(BATCH):
+        seq = plan.factorize(vb[i]).solve(rhs[i], refine_iters=3,
+                                          refine_tol=0.0)
+        assert np.array_equal(seq.x, solved.x[i])
+        assert seq.residuals == solved.residuals[i]
+        assert seq.refine_accepted == int(solved.refine_accepted[i])
+
+
+# ---------------------------------------------------------------------------
+# zero-copy system views + pickled plans
+# ---------------------------------------------------------------------------
+
+def test_system_views_are_zero_copy_and_solve(plans):
+    plan = plans["grid2d"]
+    vb = _values_batch(plan.a)
+    bf = plan.factorize_batch(vb)
+    rhs = np.random.default_rng(4).standard_normal(plan.n)
+    for i in range(BATCH):
+        sys_i = bf.system(i)
+        for blk_view, blk_bat in zip(sys_i.num.store.blocks,
+                                     bf.store.blocks):
+            assert blk_view.base is not None      # a view, not a copy
+            assert np.shares_memory(blk_view, blk_bat)
+        seq = plan.factorize(vb[i])
+        assert np.array_equal(seq.solve(rhs).x, sys_i.solve(rhs).x)
+
+
+def test_pickled_plan_factorize_batch_identical(plans):
+    plan = plans["circuit"]
+    vb = _values_batch(plan.a)
+    ref = plan.factorize_batch(vb)
+    plan2 = pickle.loads(pickle.dumps(plan))
+    got = plan2.factorize_batch(vb)
+    for b_ref, b_got in zip(ref.store.blocks, got.store.blocks):
+        assert np.array_equal(b_ref, b_got)
+
+
+# ---------------------------------------------------------------------------
+# error behaviour names the offending system
+# ---------------------------------------------------------------------------
+
+def test_factorize_batch_rejects_bad_shapes(plans):
+    plan = plans["grid2d"]
+    with pytest.raises(ValueError, match="values_batch"):
+        plan.factorize_batch(generic_values_csr(plan.a))      # (nnz,) not 2D
+    with pytest.raises(ValueError):
+        plan.factorize_batch(np.zeros((2, plan.a.nnz + 1)))
+
+
+def test_solve_batch_rejects_bad_shapes(plans):
+    plan = plans["grid2d"]
+    bf = plan.factorize_batch(_values_batch(plan.a))
+    with pytest.raises(ValueError):
+        bf.solve_batch(np.zeros(plan.n))                      # missing batch
+    with pytest.raises(ValueError):
+        bf.solve_batch(np.zeros((BATCH + 1, plan.n)))         # wrong batch
+
+
+def test_zero_pivot_names_failing_system(plans):
+    plan = plans["grid2d"]
+    vb = _values_batch(plan.a)
+    vb[2] = 0.0                                               # singular sys 2
+    with pytest.raises(ZeroPivotError):
+        plan.factorize_batch(vb)

@@ -10,7 +10,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.fill2 import fill2_dense
-from repro.core.gsofa import prepare_graph, dense_pattern, gsofa_batch, fill_masks
+from repro.core.gsofa import prepare_graph, dense_pattern, gsofa_batch
 from repro.core.multisource import run_multisource
 from repro.core.symbolic import symbolic_factorize
 from repro.core.theory import elimination_fill, minimax_fill, fill_ratio
@@ -18,7 +18,7 @@ from repro.sparse import (
     banded_random, chemical_like, circuit_like, economic_like, grid2d_laplacian,
     grid3d_laplacian, random_pattern, rcm_order, permute_csr,
 )
-from repro.sparse.csr import csr_from_coo, csr_from_dense
+from repro.sparse.csr import csr_from_dense
 
 MATS = {
     "grid2d": lambda: grid2d_laplacian(7),

@@ -6,11 +6,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig, get_config
 from repro.models import moe as moe_mod
-from repro.models import transformer as tf
 
 
 def _cfg(cf=8.0, n_experts=8, top_k=2, n_shared=0):

@@ -1,0 +1,199 @@
+"""Serving front end: plan cache + SolverEngine (ISSUE 8 / DESIGN.md §14).
+
+Contract: ``pattern_fingerprint`` is a pure content hash (same pattern ->
+same key across objects, pickle round-trips, and entry order; distinct
+patterns of the same shape -> distinct keys); ``PlanCache`` is a strict
+LRU (get refreshes recency, put evicts the least-recently-used beyond
+capacity, capacity-1 thrashes deterministically); and ``SolverEngine``
+answers every request bitwise-identically to the sequential session API
+while batching and padding dispatches behind fixed-shape slots.
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.api import LUOptions, analyze
+from repro.serve import PatternKey, PlanCache, SolverEngine, pattern_fingerprint
+from repro.sparse import circuit_like, grid2d_laplacian, permute_csr, rcm_order
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.numeric import generic_values_csr
+
+OPTS = LUOptions(concurrency=64, supernode_relax=2)
+
+
+def _matrix(seed=7, n=200):
+    a = circuit_like(n, seed=seed)
+    return permute_csr(a, rcm_order(a))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint: content hash, not object identity
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_is_content_hash():
+    a = _matrix()
+    b = CSRMatrix(n=a.n, indptr=a.indptr.copy(), indices=a.indices.copy())
+    assert pattern_fingerprint(a) == pattern_fingerprint(b)
+    assert hash(pattern_fingerprint(a)) == hash(pattern_fingerprint(b))
+
+
+def test_fingerprint_survives_pickle():
+    a = _matrix()
+    key = pattern_fingerprint(a)
+    assert pickle.loads(pickle.dumps(key)) == key
+    a2 = pickle.loads(pickle.dumps(a))
+    assert pattern_fingerprint(a2) == key
+
+
+def test_distinct_patterns_same_shape_do_not_collide():
+    """Same (n, nnz) but different structure must produce different keys —
+    the collision contract the cache relies on."""
+    a = _matrix(seed=1)
+    perm = np.random.default_rng(0).permutation(a.n)
+    b = permute_csr(a, perm)
+    assert (b.n, b.nnz) == (a.n, a.nnz)
+    assert pattern_fingerprint(a) != pattern_fingerprint(b)
+
+
+def test_fingerprint_distinguishes_generators():
+    keys = {pattern_fingerprint(_matrix(seed=s)) for s in range(8)}
+    assert len(keys) == 8
+    g = grid2d_laplacian(10)
+    assert pattern_fingerprint(g) not in keys
+
+
+# ---------------------------------------------------------------------------
+# PlanCache: strict LRU
+# ---------------------------------------------------------------------------
+
+def _keys(count):
+    return [PatternKey(n=10, nnz=10, h1=i, h2=i) for i in range(count)]
+
+
+def test_lru_eviction_order():
+    k = _keys(4)
+    cache = PlanCache(capacity=3)
+    for i in range(3):
+        assert cache.put(k[i], f"plan{i}") is None
+    assert cache.keys() == (k[0], k[1], k[2])
+    assert cache.get(k[0]) == "plan0"          # refresh 0 -> 1 is LRU now
+    assert cache.keys() == (k[1], k[2], k[0])
+    evicted = cache.put(k[3], "plan3")
+    assert evicted == k[1]
+    assert k[1] not in cache and len(cache) == 3
+    assert cache.get(k[1]) is None
+
+
+def test_capacity_one_thrash():
+    k = _keys(3)
+    cache = PlanCache(capacity=1)
+    assert cache.put(k[0], "a") is None
+    assert cache.put(k[1], "b") == k[0]
+    assert cache.put(k[2], "c") == k[1]
+    assert cache.get(k[0]) is None and cache.get(k[1]) is None
+    assert cache.get(k[2]) == "c" and len(cache) == 1
+
+
+def test_put_refresh_does_not_evict():
+    k = _keys(2)
+    cache = PlanCache(capacity=2)
+    cache.put(k[0], "a")
+    cache.put(k[1], "b")
+    assert cache.put(k[0], "a2") is None       # refresh, not insert
+    assert cache.get(k[0]) == "a2" and len(cache) == 2
+
+
+def test_cache_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+    with pytest.raises(ValueError):
+        SolverEngine(OPTS, batch_slots=0)
+
+
+# ---------------------------------------------------------------------------
+# SolverEngine: end-to-end vs the sequential session API
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_sequential_api_bitwise():
+    mats = [_matrix(seed=s) for s in range(2)]
+    eng = SolverEngine(OPTS, capacity=4, batch_slots=3)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for r in range(8):                         # 4 per pattern -> pad 2 slots
+        a = mats[r % 2]
+        vals = generic_values_csr(a, seed=r)
+        rhs = rng.standard_normal(a.n)
+        reqs.append((eng.submit(a, vals, rhs), a, vals, rhs))
+    assert eng.pending == 8
+    results = eng.flush()
+    assert eng.pending == 0
+    assert [r.rid for r in results] == [rid for rid, *_ in reqs]
+    for res, (rid, a, vals, rhs) in zip(results, reqs):
+        seq = analyze(a, OPTS).factorize(vals).solve(rhs)
+        assert np.array_equal(seq.x, res.x)
+        assert res.residual == seq.residuals[-1]
+
+
+def test_engine_stats_and_occupancy_accounting():
+    a = _matrix()
+    eng = SolverEngine(OPTS, capacity=4, batch_slots=4)
+    rng = np.random.default_rng(1)
+    for r in range(6):                         # 4 + 2 -> 2 dispatches, pad 2
+        eng.submit(a, generic_values_csr(a, seed=r), rng.standard_normal(a.n))
+    eng.flush()
+    s = eng.stats
+    assert s["requests"] == 6
+    assert s["batches"] == 2
+    assert s["padded_slots"] == 2
+    assert s["cache_misses"] == 1              # one pattern, analyzed once
+    # second flush on the same pattern is a cache hit
+    eng.submit(a, generic_values_csr(a, seed=9), rng.standard_normal(a.n))
+    eng.flush()
+    assert s["cache_misses"] == 1 and s["cache_hits"] == 1
+
+
+def test_padding_slots_do_not_leak_into_results():
+    """A padded dispatch repeats the final request; results must carry one
+    entry per real request with correct per-slot answers."""
+    a = _matrix()
+    eng = SolverEngine(OPTS, capacity=2, batch_slots=8)
+    rng = np.random.default_rng(2)
+    reqs = [(eng.submit(a, generic_values_csr(a, seed=r),
+                        rng.standard_normal(a.n)))
+            for r in range(3)]                 # 3 real, 5 padded slots
+    results = eng.flush()
+    assert len(results) == 3
+    assert sorted(r.rid for r in results) == sorted(reqs)
+    assert {r.slot for r in results} == {0, 1, 2}
+    assert eng.stats["padded_slots"] == 5
+
+
+def test_engine_eviction_reanalyzes():
+    mats = [_matrix(seed=s) for s in range(3)]
+    eng = SolverEngine(OPTS, capacity=2, batch_slots=2)
+    for a in mats:
+        eng.plan_for(a)
+    assert eng.stats["cache_evictions"] == 1   # third insert evicts first
+    eng.plan_for(mats[0])                      # evicted -> fresh analyze
+    assert eng.stats["cache_misses"] == 4
+    assert eng.stats["cache_hits"] == 0
+
+
+def test_engine_one_shot_solve():
+    a = _matrix()
+    vals = generic_values_csr(a, seed=0)
+    rhs = np.random.default_rng(3).standard_normal(a.n)
+    res = SolverEngine(OPTS).solve(a, vals, rhs)
+    seq = analyze(a, OPTS).factorize(vals).solve(rhs)
+    assert np.array_equal(seq.x, res.x)
+    assert res.batch_id == 0 and res.slot == 0
+
+
+def test_engine_rejects_bad_shapes():
+    a = _matrix()
+    eng = SolverEngine(OPTS)
+    with pytest.raises(ValueError):
+        eng.submit(a, np.zeros(a.nnz + 1), np.zeros(a.n))
+    with pytest.raises(ValueError):
+        eng.submit(a, generic_values_csr(a), np.zeros(a.n + 1))

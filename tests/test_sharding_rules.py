@@ -4,7 +4,6 @@ the TP/FSDP/ZeRO layouts on the production mesh."""
 import math
 
 import jax
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P

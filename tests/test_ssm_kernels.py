@@ -1,6 +1,5 @@
 """Shape/dtype sweeps for the SSM Pallas kernels vs their jnp oracles, and
 consistency between the kernels and the model-layer scan implementations."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

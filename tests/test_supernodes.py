@@ -169,7 +169,6 @@ def test_relax_monotonicity():
     prev = None
     for relax in (0, 1, 2, 4, 8):
         ranges = detect_from_fingerprints(fp, relax=relax, max_size=a.n)
-        sizes = ranges[:, 1] - ranges[:, 0]
         assert ranges[0, 0] == 0 and ranges[-1, 1] == a.n
         assert (ranges[1:, 0] == ranges[:-1, 1]).all()
         if prev is not None:
