@@ -19,6 +19,7 @@ Paper-figure map:
   distributed  -> DESIGN.md §11 (panel placement + 8-device analyze parity)
   roofline     -> DESIGN.md §12 (machine peak probe: STREAM triad + DGEMM)
   serve        -> DESIGN.md §14 (plan cache + batched factorize/solve tier)
+  robust       -> DESIGN.md §15 (static pivoting + perturbation + quality)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
 
@@ -66,6 +67,8 @@ REQUIRED_PHASES = {
                     "runtime", "overlap"],
     "roofline": [],
     "serve": ["serve", "factorize_batch", "solve_batch"],
+    "robust": ["analyze", "robust_prepass", "factorize", "solve_forward",
+               "robust_quality"],
 }
 
 
@@ -163,9 +166,9 @@ def main() -> None:
 
     from benchmarks import (bench_balance, bench_concurrency,
                             bench_distributed, bench_numeric,
-                            bench_refactorize, bench_serve, bench_solve,
-                            bench_space, bench_speedup, bench_supernode,
-                            bench_workload, roofline)
+                            bench_refactorize, bench_robust, bench_serve,
+                            bench_solve, bench_space, bench_speedup,
+                            bench_supernode, bench_workload, roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
@@ -179,6 +182,7 @@ def main() -> None:
         ("distributed", bench_distributed.main),
         ("roofline", roofline.main),
         ("serve", bench_serve.main),
+        ("robust", bench_robust.main),
     ]
     if args.trace:
         import benchmarks.common as common

@@ -22,7 +22,7 @@ The legacy one-shot trio (``symbolic_factorize`` -> ``numeric_factorize``
 ``DeprecationWarning`` period; the engines remain importable from
 ``repro.core.symbolic`` and ``repro.numeric``.
 """
-__version__ = "1.5.0"
+__version__ = "1.6.0"
 
 _LAZY_EXPORTS = {
     # plan/factor session API (the supported surface)
@@ -35,6 +35,10 @@ _LAZY_EXPORTS = {
     "SolverEngine": "repro.serve",
     "PlanCache": "repro.serve",
     "pattern_fingerprint": "repro.serve",
+    # numerical robustness tier (DESIGN.md §15)
+    "RobustPlan": "repro.robust",
+    "QualityReport": "repro.robust",
+    "StructurallySingularError": "repro.robust",
     # result / substrate types
     "SymbolicResult": "repro.core.symbolic",
     "NumericResult": "repro.numeric",

@@ -86,6 +86,7 @@ _SYMBOLIC_BACKENDS = ("ell", "dense", "kernel")
 _NUMERIC_BACKENDS = ("numpy", "kernel")
 _POLICIES = ("lpt", "contiguous")
 _RUNTIMES = ("static", "dynamic")
+_PIVOTS = ("none", "static")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +109,16 @@ class LUOptions:
     ``check_pattern``/``pattern_tol`` (validate_symbolic contract).
 
     Solve: ``refine_iters``/``refine_tol`` (iterative refinement bounds).
+
+    Robustness (DESIGN.md §15): ``pivot="static"`` adds the analyze-time
+    maximum-product transversal + equilibration pre-pass (the factored
+    system becomes ``Dr·P·A·Dc``, stored on the plan so refactorization
+    stays value-only); ``perturb=True`` replaces tiny pivots
+    (|piv| <= ``perturb_eps``·max|A|, default sqrt(machine eps)) with the
+    signed threshold during the sweep instead of raising, counting them in
+    ``NumericResult.perturbed_pivots`` — iterative refinement recovers the
+    accuracy.  Both off by default: the defaults are bitwise-identical to
+    the historical pipeline.
 
     Distribution: ``distribute=True`` makes ``analyze`` build a flat mesh
     over every visible device (``launch.mesh.make_flat_mesh``) when no
@@ -141,6 +152,12 @@ class LUOptions:
     # -- solve / refinement
     refine_iters: int = 2
     refine_tol: Optional[float] = None
+    # -- numerical robustness (DESIGN.md §15): static pivoting pre-pass at
+    # analyze time + tiny-pivot perturbation during the sweep; both off by
+    # default (bitwise-identical to the historical path)
+    pivot: str = "none"
+    perturb: bool = False
+    perturb_eps: Optional[float] = None
     # -- distribution (DESIGN.md §11)
     distribute: bool = False
     # -- execution runtime (DESIGN.md §13): "static" = fixed chunk loop;
@@ -167,6 +184,12 @@ class LUOptions:
         if self.runtime not in _RUNTIMES:
             raise ValueError(f"unknown runtime {self.runtime!r}; "
                              f"pick from {_RUNTIMES}")
+        if self.pivot not in _PIVOTS:
+            raise ValueError(f"unknown pivot mode {self.pivot!r}; "
+                             f"pick from {_PIVOTS}")
+        if self.perturb_eps is not None and not self.perturb_eps > 0.0:
+            raise ValueError(f"perturb_eps must be positive, got "
+                             f"{self.perturb_eps!r}")
         if self.runtime == "dynamic" and self.distribute:
             raise ValueError(
                 "runtime='dynamic' is the host-driven scheduler over the "
@@ -191,11 +214,15 @@ class LUFactorization:
 
     plan: "LUPlan"
     num: NumericResult
-    values: np.ndarray           # what was factored (refinement matvec)
+    values: np.ndarray           # ORIGINAL values (refinement matvec)
     factor_s: float              # scatter + panel-sweep wall time
     # span summary of this factorization (tracing enabled only): the same
     # spans the Chrome trace carries, rendered as a text tree by ``str()``
     stats: Optional[SpanSummary] = None
+    # the values actually swept: ``RobustPlan.transform_values(values)``
+    # under static pivoting, ``values`` itself otherwise (same object)
+    factored_values: Optional[np.ndarray] = None
+    _quality: Optional[object] = dataclasses.field(default=None, repr=False)
 
     @property
     def n(self) -> int:
@@ -231,7 +258,27 @@ class LUFactorization:
             refine_iters=(opts.refine_iters if refine_iters is None
                           else refine_iters),
             refine_tol=opts.refine_tol if refine_tol is None else refine_tol,
-            batched=batched)
+            batched=batched, transform=self.plan.robust)
+
+    @property
+    def perturbed_pivots(self) -> int:
+        """Tiny pivots bumped by the robust tier during this sweep."""
+        return self.num.perturbed_pivots
+
+    def quality(self, *, itmax: int = 5):
+        """Trust certificate of these factors (DESIGN.md §15): element
+        growth, Hager 1-norm condition estimate of the factored system, and
+        an "ok"/"suspect"/"reject" verdict.  A few triangular solves on the
+        packed factors — computed lazily and cached on this object."""
+        if self._quality is None:
+            from repro.robust.condition import estimate_quality
+
+            fvals = (self.factored_values if self.factored_values is not None
+                     else self.values)
+            self._quality = estimate_quality(
+                self.num, self.plan.a_factored, fvals,
+                perturbed_pivots=self.num.perturbed_pivots, itmax=itmax)
+        return self._quality
 
     def refactorize(self, values: np.ndarray) -> "LUFactorization":
         """Factor a new value set **in place** on this factorization's
@@ -255,9 +302,10 @@ class BatchedLUFactorization:
 
     plan: "LUPlan"
     num: BatchedNumericResult
-    values: np.ndarray           # (B, nnz) — what was factored
+    values: np.ndarray           # (B, nnz) ORIGINAL values
     factor_s: float              # scatter + batched panel-sweep wall time
     stats: Optional[SpanSummary] = None
+    factored_values: Optional[np.ndarray] = None   # (B, nnz) swept values
 
     @property
     def batch(self) -> int:
@@ -271,11 +319,22 @@ class BatchedLUFactorization:
     def store(self) -> BatchedPanelStore:
         return self.num.store
 
+    @property
+    def perturbed_pivots(self) -> np.ndarray:
+        """Per-system tiny-pivot bump counts, (B,) int64 (all zero unless
+        the plan was built with ``LUOptions(perturb=True)``)."""
+        pp = self.num.perturbed_pivots
+        return (pp if pp is not None
+                else np.zeros(self.batch, dtype=np.int64))
+
     def system(self, i: int) -> LUFactorization:
         """System i as a sequential ``LUFactorization`` (zero-copy factor
         views; its ``factor_s`` is 0.0 — the batch owns the timing)."""
-        return LUFactorization(plan=self.plan, num=self.num.system(i),
-                               values=self.values[i], factor_s=0.0)
+        return LUFactorization(
+            plan=self.plan, num=self.num.system(i),
+            values=self.values[i], factor_s=0.0,
+            factored_values=(self.factored_values[i]
+                             if self.factored_values is not None else None))
 
     def solve_batch(self, b: np.ndarray, *,
                     refine_iters: Optional[int] = None,
@@ -291,7 +350,8 @@ class BatchedLUFactorization:
             self.plan.a, b, self.values, self.num,
             refine_iters=(opts.refine_iters if refine_iters is None
                           else refine_iters),
-            refine_tol=opts.refine_tol if refine_tol is None else refine_tol)
+            refine_tol=opts.refine_tol if refine_tol is None else refine_tol,
+            transform=self.plan.robust)
 
 
 @dataclasses.dataclass
@@ -322,6 +382,17 @@ class LUPlan:
     # span summary of the analyze that built this plan (tracing enabled
     # only); picklable like everything else on the plan
     stats: Optional[SpanSummary] = None
+    # static-pivoting state (DESIGN.md §15, ``LUOptions(pivot="static")``):
+    # the ``RobustPlan`` transform and the permuted structural matrix the
+    # symbolic analysis actually ran on.  Plain numpy — the plan pickles.
+    robust: Optional[object] = None
+    factored: Optional[CSRMatrix] = None
+
+    @property
+    def a_factored(self) -> CSRMatrix:
+        """The structural matrix the factors describe: ``Dr·P·A·Dc``'s
+        pattern under static pivoting, ``a`` itself otherwise."""
+        return self.factored if self.factored is not None else self.a
 
     @property
     def n(self) -> int:
@@ -379,6 +450,14 @@ class LUPlan:
         t0 = time.perf_counter()
         if values is None:
             values = generic_values_csr(self.a)
+        values = np.asarray(values, dtype=np.float64)
+        if self.robust is not None:
+            # replay the static-pivoting transform: O(nnz) gather + scale
+            # (value-only — no symbolic work on refactorize)
+            fvals = (self.robust.transform_dense(values) if values.ndim == 2
+                     else self.robust.transform_values(values))
+        else:
+            fvals = values
         store = (_reuse_store if _reuse_store is not None
                  else PanelStore.from_structure(self.store_template))
         store._solve_schedule = self.solve_schedule
@@ -387,7 +466,7 @@ class LUPlan:
             mark = tr.mark() if tr is not None else 0
             with _ot.span("factorize"):
                 num = factor_on_store(
-                    self.a, values, store, self.schedule,
+                    self.a_factored, fvals, store, self.schedule,
                     backend=self.options.numeric_backend,
                     piv_tol=self.options.piv_tol,
                     check_pattern=self.options.check_pattern,
@@ -395,12 +474,13 @@ class LUPlan:
                     maps=self.gather_maps, csr_maps=self.csr_maps,
                     store_is_zeroed=_reuse_store is None,
                     placement=self.placement,
-                    segment_batch=self.options.segment_batch)
+                    segment_batch=self.options.segment_batch,
+                    perturb=self.options.perturb,
+                    perturb_eps=self.options.perturb_eps)
             stats = tr.summary(mark) if tr is not None else None
-        return LUFactorization(plan=self, num=num,
-                               values=np.asarray(values, dtype=np.float64),
+        return LUFactorization(plan=self, num=num, values=values,
                                factor_s=time.perf_counter() - t0,
-                               stats=stats)
+                               stats=stats, factored_values=fvals)
 
     def factorize_batch(self, values_batch: np.ndarray
                         ) -> BatchedLUFactorization:
@@ -421,6 +501,8 @@ class LUPlan:
             raise ValueError(
                 f"values_batch must be a (B, {self.a.nnz}) CSR-aligned "
                 f"stack, got shape {values_batch.shape}")
+        fvals_batch = (self.robust.transform_values(values_batch)
+                       if self.robust is not None else values_batch)
         bstore = BatchedPanelStore(self.store_template,
                                    values_batch.shape[0])
         # solve_batch levels come from the plan, cached where the batched
@@ -430,18 +512,21 @@ class LUPlan:
             mark = tr.mark() if tr is not None else 0
             with _ot.span("factorize_batch"):
                 num = factor_batch_on_store(
-                    self.a, values_batch, bstore, self.schedule,
+                    self.a_factored, fvals_batch, bstore, self.schedule,
                     backend=self.options.numeric_backend,
                     piv_tol=self.options.piv_tol,
                     check_pattern=self.options.check_pattern,
                     pattern_tol=self.options.pattern_tol,
                     maps=self.gather_maps, csr_maps=self.csr_maps,
-                    store_is_zeroed=True)
+                    store_is_zeroed=True,
+                    perturb=self.options.perturb,
+                    perturb_eps=self.options.perturb_eps)
             stats = tr.summary(mark) if tr is not None else None
         return BatchedLUFactorization(plan=self, num=num,
                                       values=values_batch,
                                       factor_s=time.perf_counter() - t0,
-                                      stats=stats)
+                                      stats=stats,
+                                      factored_values=fvals_batch)
 
     def solve(self, b: np.ndarray,
               values: Optional[np.ndarray] = None) -> SolveResult:
@@ -454,6 +539,7 @@ class LUPlan:
 
 
 def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
+            values: Optional[np.ndarray] = None,
             mesh=None, on_progress=None) -> LUPlan:
     """Symbolic analysis of ``a``: one fixpoint pass streams out the L/U
     counts, the supernode partition (fingerprints), and the sparse
@@ -474,6 +560,16 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
     This never materializes a dense (n, n) pattern on the host *or on any
     shard* — memory stays O(nnz(L+U)) plus the streamed chunk masks, so
     it scales to the packed numeric path's n (tens of thousands and up).
+
+    With ``LUOptions(pivot="static")`` the robust pre-pass runs first
+    (DESIGN.md §15): a maximum-product transversal over ``values``
+    (a *representative* value set — defaults to ``generic_values_csr(a)``,
+    which weights pattern structure only; pass real values for
+    value-informed pivoting) picks the row permutation, Ruiz equilibration
+    the scalings, and the symbolic fixpoint + everything downstream run on
+    the permuted pattern.  The transform is a plan property
+    (``LUPlan.robust``), so refactorization remains a value-only O(nnz)
+    gather + scale.
     """
     t0 = time.perf_counter()
     opts = options if options is not None else LUOptions()
@@ -481,11 +577,20 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
         from repro.launch.mesh import make_flat_mesh
 
         mesh = make_flat_mesh()
+    robust = None
+    a_sym = a
     with _ot.ensure(opts.trace) as tr:
         mark = tr.mark() if tr is not None else 0
+        if opts.pivot == "static":
+            from repro.robust import build_robust_prepass
+
+            with _ot.span("robust_prepass"):
+                pivot_values = (values if values is not None
+                                else generic_values_csr(a))
+                a_sym, robust = build_robust_prepass(a, pivot_values)
         with _ot.span("analyze"):
             sym = _symbolic_factorize(
-                a, concurrency=opts.concurrency, backend=opts.backend,
+                a_sym, concurrency=opts.concurrency, backend=opts.backend,
                 combined=opts.combined, bubble=opts.bubble,
                 use_arena=opts.use_arena, budget_bytes=opts.budget_bytes,
                 checkpoint_path=opts.checkpoint_path,
@@ -502,7 +607,7 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
                 store_template = PanelStore(pattern, schedule.supernodes)
             with _ot.span("gather_maps"):
                 gather_maps = build_gather_maps(store_template, schedule)
-                csr_maps = store_template.csr_maps(a)
+                csr_maps = store_template.csr_maps(a_sym)
             with _ot.span("solve_schedule"):
                 solve_schedule = build_solve_schedule(store_template)
             placement = None
@@ -525,4 +630,6 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
                   gather_maps=gather_maps, csr_maps=csr_maps,
                   solve_schedule=solve_schedule,
                   analyze_s=time.perf_counter() - t0,
-                  placement=placement, stats=stats)
+                  placement=placement, stats=stats,
+                  robust=robust,
+                  factored=a_sym if robust is not None else None)

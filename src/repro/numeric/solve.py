@@ -253,6 +253,62 @@ def solve_factored(num: NumericResult, b: np.ndarray, *,
                                batched=batched)
 
 
+# -- transposed substitution (robust tier, DESIGN.md §15) --------------------
+#
+# Hager's 1-norm condition estimator needs A^{-T} applied to a vector, which
+# the packed factors give as L^{-T} U^{-T}.  The sweeps mirror the primal
+# ones with reading and writing roles swapped: L^T pulls a panel's own range
+# from its *below* rows (owned by later panels, so a plain descending panel
+# walk is topologically correct — once a panel's diagonal solve ran, nothing
+# later writes its range), U^T pulls from the *above* rows (earlier panels,
+# ascending walk).  These are diagnostic paths (a handful of solves per
+# quality estimate), so they stay serial and unscheduled.
+
+
+def backward_substitute_t(store: PanelStore, b: np.ndarray) -> np.ndarray:
+    """x with L^T x = b (unit-lower L in the packed blocks, transposed)."""
+    x = np.asarray(b, dtype=np.float64).copy()
+    with _ot.span("solve_backward_t"):
+        for j in range(store.n_panels - 1, -1, -1):
+            s, e = store.supernodes[j]
+            w = e - s
+            d = int(store.diag[j])
+            below = store.rows[j][d + w:]
+            if len(below):
+                x[s:e] -= store.blocks[j][d + w:].T @ x[below]
+            if w > 1:
+                x[s:e] = solve_triangular(store.blocks[j][d:d + w], x[s:e],
+                                          lower=True, unit_diagonal=True,
+                                          trans="T", check_finite=False)
+    return x
+
+
+def forward_substitute_t(store: PanelStore, b: np.ndarray) -> np.ndarray:
+    """w with U^T w = b (upper U in the packed blocks, transposed)."""
+    y = np.asarray(b, dtype=np.float64).copy()
+    with _ot.span("solve_forward_t"):
+        for j in range(store.n_panels):
+            s, e = store.supernodes[j]
+            w = e - s
+            d = int(store.diag[j])
+            above = store.rows[j][:d]
+            if len(above):
+                y[s:e] -= store.blocks[j][:d].T @ y[above]
+            diag = store.blocks[j][d:d + w]
+            if w == 1:
+                y[s] = y[s] / diag[0, 0]
+            else:
+                y[s:e] = solve_triangular(diag, y[s:e], lower=False,
+                                          trans="T", check_finite=False)
+    return y
+
+
+def solve_factored_transposed(num: NumericResult, b: np.ndarray) -> np.ndarray:
+    """z = A^{-T} b = L^{-T} U^{-T} b on the packed factors."""
+    return backward_substitute_t(num.store,
+                                 forward_substitute_t(num.store, b))
+
+
 @dataclasses.dataclass
 class SolveResult:
     """Solution + convergence history of one ``solve`` call.
@@ -297,7 +353,8 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
           refine_iters: int = 2, refine_tol: Optional[float] = None,
           n_bins: int = 8, policy: str = "lpt",
           backend: str = "numpy",
-          batched: Optional[bool] = None) -> SolveResult:
+          batched: Optional[bool] = None,
+          transform=None) -> SolveResult:
     """Solve A x = b through the symbolic -> packed-numeric -> substitution
     pipeline, with iterative refinement.
 
@@ -319,6 +376,14 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
     below ``refine_tol`` (default 1e-14 — a well-conditioned solve lands at
     machine precision immediately and skips the extra substitution + matvec
     sweeps; pass ``refine_tol=0.0`` to squeeze every accepted correction).
+
+    ``transform`` (a ``repro.robust.RobustPlan``) wires the static-pivoting
+    permutation/scalings around every inner factored solve (DESIGN.md §15):
+    the factors are of ``A_f = Dr·P·A·Dc``, so each substitution runs on
+    ``apply_rhs(rhs)`` and its result maps back through ``apply_solution``
+    — while ``a``/``values``/``b`` stay the ORIGINAL system, which is what
+    the refinement matvec iterates against.  ``None`` (default) leaves the
+    float operations bitwise-identical to the historical path.
 
     Raises ``ZeroPivotError`` if the factorization hits a zero/near-zero
     pivot (propagated from ``numeric_factorize``).
@@ -355,11 +420,21 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
 
     if refine_tol is None:
         refine_tol = 1e-14
+
+    if transform is None:
+        def fsolve(rhs):
+            return solve_factored(num, rhs, batched=batched)
+    else:
+        def fsolve(rhs):
+            return transform.apply_solution(
+                solve_factored(num, transform.apply_rhs(rhs),
+                               batched=batched))
+
     b_norms = (np.array([np.linalg.norm(b)]) if b.ndim == 1
                else np.linalg.norm(b, axis=0))
     b_norms = np.where(b_norms == 0.0, 1.0, b_norms)
     with _ot.span("solve"):
-        x = solve_factored(num, b, batched=batched)
+        x = fsolve(b)
         res_cols = _col_residuals(matvec, x, b, b_norms)
         residuals = [float(res_cols.max())]
         accepted = 0
@@ -368,7 +443,7 @@ def solve(a: CSRMatrix, b: np.ndarray, *, sym=None,
                 break
             with _ot.span("refine"):
                 r = b - matvec(x)
-                x_try = x + solve_factored(num, r, batched=batched)
+                x_try = x + fsolve(r)
                 res_try = _col_residuals(matvec, x_try, b, b_norms)
                 improve = res_try < res_cols
                 if not improve.any():
@@ -548,7 +623,8 @@ class BatchedSolveResult:
 
 def solve_batch(a: CSRMatrix, b: np.ndarray, values_batch: np.ndarray,
                 bnum: BatchedNumericResult, *, refine_iters: int = 2,
-                refine_tol: Optional[float] = None) -> BatchedSolveResult:
+                refine_tol: Optional[float] = None,
+                transform=None) -> BatchedSolveResult:
     """Substitution + iterative refinement across all B factored systems at
     once: ``b`` is (B, n) or (B, n, k), ``values_batch`` the (B, nnz) value
     stack ``bnum`` was factored from (each system refines against its OWN
@@ -561,6 +637,11 @@ def solve_batch(a: CSRMatrix, b: np.ndarray, values_batch: np.ndarray,
     when improving, and stopped systems' solutions are never touched — so
     every system's x, residual history, and accepted count are
     bitwise-identical to a loop of ``solve(..., num=num_i)`` calls.
+
+    ``transform`` (a ``repro.robust.RobustPlan``) applies the
+    static-pivoting permutation/scalings around the batched factored
+    solves, exactly as in sequential ``solve``; ``a``/``values_batch``/``b``
+    stay the original systems the refinement iterates against.
     """
     t0 = time.perf_counter()
     bsz = bnum.batch
@@ -577,6 +658,14 @@ def solve_batch(a: CSRMatrix, b: np.ndarray, values_batch: np.ndarray,
     if refine_tol is None:
         refine_tol = 1e-14
 
+    if transform is None:
+        def fsolve(rhs):
+            return solve_factored_batch(bnum, rhs)
+    else:
+        def fsolve(rhs):
+            return transform.apply_solution_batch(
+                solve_factored_batch(bnum, transform.apply_rhs_batch(rhs)))
+
     def residuals_of(x):
         # per-system _col_residuals (same norm calls as sequential solve)
         return np.stack([
@@ -589,7 +678,7 @@ def solve_batch(a: CSRMatrix, b: np.ndarray, values_batch: np.ndarray,
     b_norms = np.where(b_norms == 0.0, 1.0, b_norms)
 
     with _ot.span("solve_batch"):
-        x = solve_factored_batch(bnum, b)
+        x = fsolve(b)
         res_cols = residuals_of(x)                       # (B, kk)
         histories = [[float(res_cols[i].max())] for i in range(bsz)]
         accepted = np.zeros(bsz, dtype=np.int64)
@@ -603,7 +692,7 @@ def solve_batch(a: CSRMatrix, b: np.ndarray, values_batch: np.ndarray,
             with _ot.span("refine"):
                 r = np.stack([b[i] - csr_matvec(a, values_batch[i], x[i])
                               for i in range(bsz)])
-                x_try = x + solve_factored_batch(bnum, r)
+                x_try = x + fsolve(r)
                 res_try = residuals_of(x_try)
                 improve = (res_try < res_cols) & active[:, None]
                 any_imp = improve.any(axis=1)

@@ -58,8 +58,8 @@ from repro.obs import metrics as _om
 from repro.obs import trace as _ot
 from repro.sparse.csr import CSRMatrix
 from repro.sparse.numeric import (
-    check_pivot, generic_values_csr, lu_inplace,
-    lu_inplace_batched, pivot_tolerance,
+    PerturbState, ZeroPivotError, check_pivot, generic_values_csr,
+    lu_inplace, lu_inplace_batched, perturb_threshold, pivot_tolerance,
 )
 
 _BACKENDS = ("numpy", "kernel")
@@ -82,6 +82,7 @@ class NumericResult:
     n_updates: int               # ancestor panel updates consumed
     gemm_flops: int              # flops of the accumulated trailing GEMMs
     outside_max: float           # largest |value| found outside the pattern
+    perturbed_pivots: int = 0    # tiny pivots bumped by the robust tier
     _dense_lu: Optional[Tuple[np.ndarray, np.ndarray]] = \
         dataclasses.field(default=None, repr=False)
 
@@ -196,20 +197,23 @@ def _panel_prepare(store: PanelStore, schedule: PanelSchedule, j: int,
 
 
 def _panel_finish(store: PanelStore, schedule: PanelSchedule, j: int,
-                  piv_tol: float) -> None:
+                  piv_tol: float,
+                  perturb: PerturbState | None = None) -> None:
     """Phase B of panel j: diagonal-block factor + below-panel solve."""
     s, e = schedule.supernodes[j]
     w = e - s
     block = store.blocks[j]
     d = int(store.diag[j])
-    lu_inplace(block[d:d + w], piv_tol, col0=s)
+    lu_inplace(block[d:d + w], piv_tol, col0=s, perturb=perturb)
     if block.shape[0] > d + w:
         block[d + w:] = _solve_upper_right(block[d:d + w], block[d + w:])
 
 
 def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
                   piv_tol: float, backend: str,
-                  maps=None) -> Tuple[int, int, float]:
+                  maps=None,
+                  perturb: PerturbState | None = None
+                  ) -> Tuple[int, int, float]:
     """Factor panel j in place on its packed block (per-panel dispatch).
 
     ``maps`` (a ``schedule.PanelMaps``) supplies the panel's precomputed
@@ -237,12 +241,13 @@ def _factor_panel(store: PanelStore, schedule: PanelSchedule, j: int,
         else:
             upd = acc - lp @ b
         block[d:] = upd
-    _panel_finish(store, schedule, j, piv_tol)
+    _panel_finish(store, schedule, j, piv_tol, perturb=perturb)
     return len(schedule.ancestors[j]), flops, dropped
 
 
 def _factor_segment_batched(store: PanelStore, schedule: PanelSchedule,
-                            seg, piv_tol: float, backend: str, maps=None):
+                            seg, piv_tol: float, backend: str, maps=None,
+                            perturb: PerturbState | None = None):
     """Factor one (level, device) panel segment with same-shape GEMMs
     stacked into single batched dispatches (DESIGN.md §13).
 
@@ -324,7 +329,7 @@ def _factor_segment_batched(store: PanelStore, schedule: PanelSchedule,
         reg.count("gemm.batched.panels", batched_panels)
 
     for j in seg:
-        _panel_finish(store, schedule, int(j), piv_tol)
+        _panel_finish(store, schedule, int(j), piv_tol, perturb=perturb)
     return out
 
 
@@ -337,7 +342,9 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
                     maps=None, csr_maps=None,
                     store_is_zeroed: bool = False,
                     placement=None,
-                    segment_batch: bool = True) -> NumericResult:
+                    segment_batch: bool = True,
+                    perturb: bool = False,
+                    perturb_eps: Optional[float] = None) -> NumericResult:
     """Scatter ``values`` into ``store`` and run the level-scheduled panel
     sweep — the value-dependent core shared by one-shot
     ``numeric_factorize`` and plan-based ``LUPlan.factorize`` (which passes
@@ -358,7 +365,14 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     ``_factor_segment_batched``: same-shape panels issue ONE stacked GEMM
     dispatch instead of one per panel — bitwise-identical floats, far
     fewer kernel launches (DESIGN.md §13).  Off = legacy per-panel
-    dispatch, kept as the benchmark comparison point."""
+    dispatch, kept as the benchmark comparison point.
+
+    ``perturb`` enables tiny-pivot perturbation (DESIGN.md §15): pivots
+    with |piv| <= ``perturb_eps``·max|A| (default sqrt(machine eps)) are
+    replaced by the signed threshold instead of raising; the count lands in
+    ``NumericResult.perturbed_pivots`` and iterative refinement downstream
+    recovers the accuracy.  Off (default), the float operations are the
+    historical ones bit for bit."""
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; pick from {_BACKENDS}")
     n = store.n
@@ -393,6 +407,8 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     scale = float(np.abs(values).max()) if values.size else 0.0
     if piv_tol is None:
         piv_tol = pivot_tolerance(scale)
+    pstate = PerturbState(perturb_threshold(scale, perturb_eps)) \
+        if perturb else None
 
     # per-device dispatch contexts: only the jax kernel backend has device
     # placement to exploit; numpy BLAS segments are a pure scheduling order
@@ -413,7 +429,7 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     obs_on = _ot.ENABLED
     gemm_bytes = 0
     sweep_t0 = time.perf_counter() if obs_on else 0.0
-    for level in schedule.levels:
+    for li, level in enumerate(schedule.levels):
         if placement is None or placement.n_devices <= 1:
             segments = ((None, level),)
         else:
@@ -429,16 +445,21 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
                 track = f"device {d}" if d is not None else None
                 seg_t0 = time.perf_counter() if seg_times is not None else 0.0
                 with ctx, _ot.span("factor_segment", track=track):
-                    if segment_batch and len(seg) > 1:
-                        panel_stats = _factor_segment_batched(
-                            store, schedule, seg, piv_tol, backend,
-                            maps=maps)
-                    else:
-                        panel_stats = [
-                            (int(j),) + _factor_panel(
-                                store, schedule, int(j), piv_tol, backend,
-                                maps=maps[j] if maps is not None else None)
-                            for j in seg]
+                    try:
+                        if segment_batch and len(seg) > 1:
+                            panel_stats = _factor_segment_batched(
+                                store, schedule, seg, piv_tol, backend,
+                                maps=maps, perturb=pstate)
+                        else:
+                            panel_stats = [
+                                (int(j),) + _factor_panel(
+                                    store, schedule, int(j), piv_tol, backend,
+                                    maps=maps[j] if maps is not None else None,
+                                    perturb=pstate)
+                                for j in seg]
+                    except ZeroPivotError as e:
+                        raise e.with_context(
+                            panel=int(store.sup_of_col[e.k]), level=li)
                     for j, upd, flops, dropped in panel_stats:
                         n_updates += upd
                         gemm_flops += flops
@@ -463,6 +484,8 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
         reg.count("gemm.flops", gemm_flops)
         reg.count("gemm.bytes", gemm_bytes)
         reg.count("gemm.seconds", time.perf_counter() - sweep_t0)
+        if pstate is not None and pstate.count:
+            reg.count("robust.perturbed_pivots", int(pstate.count))
 
     outside_max = max(store.padding_max(), dropped_max)
     if check_pattern and outside_max > pattern_tol * scale:
@@ -475,7 +498,8 @@ def factor_on_store(a: Optional[CSRMatrix], values: np.ndarray,
     return NumericResult(n=n, store=store, schedule=schedule, backend=backend,
                          elapsed_s=time.perf_counter() - t0,
                          n_updates=n_updates, gemm_flops=gemm_flops,
-                         outside_max=outside_max)
+                         outside_max=outside_max,
+                         perturbed_pivots=(pstate.count if pstate else 0))
 
 
 @dataclasses.dataclass
@@ -501,6 +525,7 @@ class BatchedNumericResult:
     n_updates: int               # ancestor panel updates, per system
     gemm_flops: int              # trailing-GEMM flops, per system
     outside_max: np.ndarray      # (B,) largest |value| outside the pattern
+    perturbed_pivots: Optional[np.ndarray] = None   # (B,) per-system counts
 
     @property
     def n_supernodes(self) -> int:
@@ -515,7 +540,10 @@ class BatchedNumericResult:
                              schedule=self.schedule, backend=self.backend,
                              elapsed_s=0.0, n_updates=self.n_updates,
                              gemm_flops=self.gemm_flops,
-                             outside_max=float(self.outside_max[i]))
+                             outside_max=float(self.outside_max[i]),
+                             perturbed_pivots=(
+                                 int(self.perturbed_pivots[i])
+                                 if self.perturbed_pivots is not None else 0))
 
 
 def _panel_prepare_batched(bstore: BatchedPanelStore,
@@ -575,7 +603,8 @@ def _panel_prepare_batched(bstore: BatchedPanelStore,
 
 def _panel_finish_batched(bstore: BatchedPanelStore,
                           schedule: PanelSchedule, j: int,
-                          piv_tol: np.ndarray) -> None:
+                          piv_tol: np.ndarray,
+                          perturb: PerturbState | None = None) -> None:
     """``_panel_finish`` over the system axis: elementwise batched
     diagonal LU (``lu_inplace_batched``) + per-system LAPACK below-panel
     solves; ``piv_tol`` is the (B,) per-system threshold."""
@@ -583,7 +612,7 @@ def _panel_finish_batched(bstore: BatchedPanelStore,
     w = e - s
     block = bstore.blocks[j]
     d = int(bstore.diag[j])
-    lu_inplace_batched(block[:, d:d + w], piv_tol, col0=s)
+    lu_inplace_batched(block[:, d:d + w], piv_tol, col0=s, perturb=perturb)
     if block.shape[1] > d + w:
         diag = block[:, d:d + w]
         for i in range(bstore.batch):
@@ -598,7 +627,9 @@ def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
                           check_pattern: bool = True,
                           pattern_tol: Optional[float] = None,
                           maps=None, csr_maps=None,
-                          store_is_zeroed: bool = False
+                          store_is_zeroed: bool = False,
+                          perturb: bool = False,
+                          perturb_eps: Optional[float] = None
                           ) -> BatchedNumericResult:
     """``factor_on_store`` vmapped over B same-pattern value sets
     (DESIGN.md §14): scatter the (B, nnz) CSR-aligned stack into the
@@ -651,6 +682,8 @@ def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
         piv_tol_sys = np.finfo(np.float64).eps * np.maximum(scale, 0.0)
     else:
         piv_tol_sys = np.full(bsz, float(piv_tol))
+    eps = np.float64(perturb_threshold(1.0, perturb_eps))
+    pstate = PerturbState(eps * np.maximum(scale, 0.0)) if perturb else None
 
     n_updates = 0
     gemm_flops = 0
@@ -659,7 +692,7 @@ def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
     sweep_t0 = time.perf_counter() if obs_on else 0.0
     batched_calls = 0
     batched_panels = 0
-    for level in schedule.levels:
+    for li, level in enumerate(schedule.levels):
         with _ot.span("factor_level"):
             operands = {}
             groups: dict = {}
@@ -719,7 +752,11 @@ def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
                               8 * len(js) * bsz * (m * k + k * w + 2 * m * w))
 
             for j in level:
-                _panel_finish_batched(bstore, schedule, int(j), piv_tol_sys)
+                try:
+                    _panel_finish_batched(bstore, schedule, int(j),
+                                          piv_tol_sys, perturb=pstate)
+                except ZeroPivotError as e:
+                    raise e.with_context(panel=int(j), level=li)
     if obs_on:
         reg = _om.registry()
         if batched_calls:
@@ -727,6 +764,8 @@ def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
             reg.count("gemm.batched.panels", batched_panels)
         reg.count("gemm.flops", gemm_flops * bsz)
         reg.count("gemm.seconds", time.perf_counter() - sweep_t0)
+        if pstate is not None and pstate.total():
+            reg.count("robust.perturbed_pivots", pstate.total())
 
     outside_max = np.maximum(bstore.padding_max(), dropped_max)
     bad = outside_max > pattern_tol * scale
@@ -743,7 +782,10 @@ def factor_batch_on_store(a: Optional[CSRMatrix], values_batch: np.ndarray,
                                 schedule=schedule, backend=backend,
                                 elapsed_s=time.perf_counter() - t0,
                                 n_updates=n_updates, gemm_flops=gemm_flops,
-                                outside_max=outside_max)
+                                outside_max=outside_max,
+                                perturbed_pivots=(
+                                    pstate.count if pstate is not None
+                                    else np.zeros(bsz, dtype=np.int64)))
 
 
 def numeric_factorize(a: CSRMatrix, sym=None, *,

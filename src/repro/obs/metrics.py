@@ -21,6 +21,9 @@ fingerprint.seconds             counter   wall seconds inside those updates
 gemm.flops                      counter   flops of the accumulated panel GEMMs
 gemm.bytes                      counter   analytic bytes gathered + scattered
 gemm.seconds                    counter   wall seconds of the panel sweep
+robust.perturbed_pivots         counter   tiny pivots bumped by the sweep
+robust.growth                   gauge     element growth max|L\\U|/max|A_f|
+robust.cond_estimate            gauge     Hager cond_1 estimate (-1 = inf)
 ==============================  ========  =====================================
 
 Roofline: ``fraction_of_peak`` / ``roofline_report`` are pure functions of

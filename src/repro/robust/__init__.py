@@ -1,0 +1,38 @@
+"""Numerical robustness tier (DESIGN.md §15): static pivoting, tiny-pivot
+perturbation support, and factorization-quality certificates.
+
+The pipeline's contract elsewhere is *pivot-free* numeric sweeps on a
+pattern fixed at analyze time.  This package supplies everything that
+makes that contract survive indefinite / non-diagonally-dominant systems:
+
+* ``build_robust_prepass`` / ``RobustPlan`` — the analyze-time
+  maximum-product transversal + Ruiz equilibration producing the
+  ``A_f = Dr·P·A·Dc`` transform stored on the plan
+  (``LUOptions(pivot="static")``).
+* ``QualityReport`` / ``estimate_quality`` — element growth + Hager 1-norm
+  condition estimate + trust verdict on a completed factorization
+  (``LUFactorization.quality()``).
+
+Tiny-pivot perturbation itself lives with the pivot kernels
+(``repro.sparse.numeric.PerturbState``, ``LUOptions(perturb=True)``); its
+counts surface here through the quality report.
+"""
+from repro.robust.condition import (
+    QualityReport, condest_1, element_growth, estimate_quality,
+)
+from repro.robust.transversal import (
+    RobustPlan, StructurallySingularError, build_robust_prepass,
+    equilibrate, max_product_transversal,
+)
+
+__all__ = [
+    "QualityReport",
+    "RobustPlan",
+    "StructurallySingularError",
+    "build_robust_prepass",
+    "condest_1",
+    "element_growth",
+    "equilibrate",
+    "estimate_quality",
+    "max_product_transversal",
+]

@@ -1,0 +1,222 @@
+"""Static-pivoting pre-pass: maximum-product transversal + equilibration
+(DESIGN.md §15).
+
+GSoFa-style symbolic factorization is only useful when the numeric sweep it
+feeds can run *without* pivoting — row exchanges at factor time would
+invalidate the predicted pattern.  The SuperLU_DIST / HYLU / GLU3.0 answer
+is to spend the pivoting budget **once, at analyze time**: pick a row
+permutation that puts the largest attainable entries on the diagonal
+(a maximum-weight transversal of the bipartite value graph, MC64 job=5
+style), equilibrate rows and columns so every scaled entry is O(1), and
+factorize the permuted, scaled matrix ``A_f = Dr·P·A·Dc`` with no pivoting
+at all.  The permutation and scalings are *plan properties*: refactorizing
+with new values replays a precomputed O(nnz) index gather + elementwise
+scale (``RobustPlan.transform_values``) — no symbolic work, no matching
+rerun — so the analyze-once/refactorize-many contract survives intact.
+
+The matching maximizes the product of |A[perm[j], j]| over the chosen
+transversal (equivalently minimizes sum of ``log(colmax_j) - log|a_ij|``,
+the classic MC64 objective) via scipy's sparse LAPJVsp; entries with zero
+*value* carry no weight information and are excluded, with a structural
+fallback so a pattern-nonsingular matrix whose value support happens to be
+deficient still gets a valid transversal.  Scaling is Ruiz equilibration
+(alternating row/column sup-norm square-root scaling, a fixed iteration
+count so results are deterministic), which converges to max|row| =
+max|col| = 1 — the same fixed point MC64's duals produce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+
+class StructurallySingularError(ValueError):
+    """The pattern admits no complete transversal: some set of k rows
+    touches fewer than k columns (Hall violation), so *no* row permutation
+    can produce a zero-free diagonal — the matrix is singular for every
+    value assignment and static pivoting cannot help."""
+
+
+def _entry_triplets(a: CSRMatrix, values: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(rows, cols, |values|) of every stored entry, CSR order."""
+    values = np.asarray(values, dtype=np.float64)
+    rows = np.repeat(np.arange(a.n, dtype=np.int64), np.diff(a.indptr))
+    cols = a.indices.astype(np.int64)
+    if values.ndim == 2:                 # dense (n, n) convenience form
+        absv = np.abs(values[rows, cols])
+    else:
+        if values.shape != (a.nnz,):
+            raise ValueError(f"values must be CSR-aligned ({a.nnz},) or "
+                             f"dense ({a.n}, {a.n}), got {values.shape}")
+        absv = np.abs(values)
+    return rows, cols, absv
+
+
+def _matching(n: int, rows: np.ndarray, cols: np.ndarray,
+              weights: np.ndarray) -> np.ndarray:
+    """perm with ``perm[j]`` = the row matched to column j, maximizing the
+    product of ``weights`` over the transversal.  Raises ``ValueError``
+    (from scipy) when no complete matching exists on these edges."""
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import min_weight_full_bipartite_matching
+
+    # max prod w_ij == min sum (log colmax_j - log w_ij); the +1 shift keeps
+    # every stored cost strictly positive (scipy treats stored zeros as
+    # absent edges)
+    colmax = np.zeros(n, dtype=np.float64)
+    np.maximum.at(colmax, cols, weights)
+    cost = np.log(colmax[cols]) - np.log(weights) + 1.0
+    graph = sp.csr_matrix((cost, (rows, cols)), shape=(n, n))
+    row_ind, col_ind = min_weight_full_bipartite_matching(graph)
+    perm = np.empty(n, dtype=np.int64)
+    perm[col_ind] = row_ind
+    return perm
+
+
+def max_product_transversal(a: CSRMatrix, values: np.ndarray) -> np.ndarray:
+    """Row permutation ``perm`` with factored row j = original row
+    ``perm[j]``, chosen to maximize ``prod_j |A[perm[j], j]|``.
+
+    Zero-valued stored entries are excluded from the weighted matching
+    (log-weight undefined; a zero on the diagonal is exactly what we are
+    permuting *away* from).  If the nonzero-value support has no complete
+    matching, falls back to a structural matching over the full pattern
+    (unit weights); only a pattern-level Hall violation raises
+    ``StructurallySingularError``.
+    """
+    rows, cols, absv = _entry_triplets(a, values)
+    live = absv > 0.0
+    if live.any():
+        try:
+            return _matching(a.n, rows[live], cols[live], absv[live])
+        except ValueError:
+            pass                    # value support deficient — go structural
+    try:
+        return _matching(a.n, rows, cols, np.ones(len(rows)))
+    except ValueError:
+        raise StructurallySingularError(
+            f"pattern has no complete transversal at n={a.n} — the matrix "
+            f"is structurally singular; no static pivoting can repair it"
+        ) from None
+
+
+def equilibrate(n: int, rows: np.ndarray, cols: np.ndarray,
+                absv: np.ndarray, *, iters: int = 8
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Ruiz row/column equilibration of the |A| triple: returns positive
+    ``(r, c)`` with ``r[rows] * absv * c[cols]`` having row and column
+    sup-norms approaching 1.  A fixed iteration count (convergence is
+    quadratic; 8 is ample) keeps results deterministic and refactorization
+    value-only.  All-zero rows/columns keep scale 1.0."""
+    r = np.ones(n, dtype=np.float64)
+    c = np.ones(n, dtype=np.float64)
+    for _ in range(max(1, iters)):
+        s = absv * r[rows] * c[cols]
+        rmax = np.zeros(n, dtype=np.float64)
+        np.maximum.at(rmax, rows, s)
+        r /= np.sqrt(np.where(rmax > 0.0, rmax, 1.0))
+        s = absv * r[rows] * c[cols]
+        cmax = np.zeros(n, dtype=np.float64)
+        np.maximum.at(cmax, cols, s)
+        c /= np.sqrt(np.where(cmax > 0.0, cmax, 1.0))
+    return r, c
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustPlan:
+    """The value-independent static-pivoting state stored on an ``LUPlan``
+    (plain numpy arrays only — plans keep pickling).
+
+    The factored system is ``A_f = Dr · P · A · Dc``: factored row j is
+    original row ``perm[j]`` scaled by ``row_scale[j]``; column j is scaled
+    by ``col_scale[j]``.  ``A x = b`` becomes ``A_f y = apply_rhs(b)`` with
+    ``x = apply_solution(y)``.  ``value_map``/``value_scale`` replay the
+    whole transform on a CSR value vector in O(nnz):
+    ``A_f values[p] = values[value_map[p]] * value_scale[p]``.
+    """
+
+    perm: np.ndarray          # (n,) factored row j <- original row perm[j]
+    row_scale: np.ndarray     # (n,) Dr, indexed by *factored* row
+    col_scale: np.ndarray     # (n,) Dc, indexed by column
+    value_map: np.ndarray     # (nnz,) factored CSR slot -> original CSR slot
+    value_scale: np.ndarray   # (nnz,) Dr·Dc factor per factored slot
+
+    @property
+    def n(self) -> int:
+        return len(self.perm)
+
+    # -- value transform (the per-refactorization O(nnz) work) --------------
+    def transform_values(self, values: np.ndarray) -> np.ndarray:
+        """CSR values of A -> CSR values of A_f; ``values`` is (nnz,) or a
+        batched (B, nnz) stack (the gather/scale broadcasts)."""
+        values = np.asarray(values, dtype=np.float64)
+        return values[..., self.value_map] * self.value_scale
+
+    def transform_dense(self, dense: np.ndarray) -> np.ndarray:
+        """Dense (n, n) values of A -> dense values of A_f."""
+        dense = np.asarray(dense, dtype=np.float64)
+        return (dense[self.perm] * self.row_scale[:, None]
+                * self.col_scale[None, :])
+
+    # -- solve-side transforms ----------------------------------------------
+    def apply_rhs(self, b: np.ndarray) -> np.ndarray:
+        """b of ``A x = b`` -> rhs of the factored system: Dr·P·b
+        ((n,) or multi-RHS (n, k))."""
+        b = np.asarray(b, dtype=np.float64)
+        pb = b[self.perm]
+        return (self.row_scale * pb if b.ndim == 1
+                else self.row_scale[:, None] * pb)
+
+    def apply_solution(self, y: np.ndarray) -> np.ndarray:
+        """Solution y of the factored system -> x of ``A x = b``: Dc·y."""
+        y = np.asarray(y, dtype=np.float64)
+        return (self.col_scale * y if y.ndim == 1
+                else self.col_scale[:, None] * y)
+
+    def apply_rhs_batch(self, b: np.ndarray) -> np.ndarray:
+        """``apply_rhs`` over a leading system axis: (B, n) or (B, n, k)."""
+        b = np.asarray(b, dtype=np.float64)
+        pb = b[:, self.perm]
+        return (self.row_scale * pb if b.ndim == 2
+                else self.row_scale[None, :, None] * pb)
+
+    def apply_solution_batch(self, y: np.ndarray) -> np.ndarray:
+        y = np.asarray(y, dtype=np.float64)
+        return (self.col_scale * y if y.ndim == 2
+                else self.col_scale[None, :, None] * y)
+
+
+def build_robust_prepass(a: CSRMatrix, values: np.ndarray, *,
+                         scale_iters: int = 8
+                         ) -> Tuple[CSRMatrix, RobustPlan]:
+    """The analyze-time static-pivoting pre-pass: returns the permuted
+    structural matrix ``a_f`` (whose pattern the symbolic fixpoint runs on)
+    and the ``RobustPlan`` that replays the transform per value set.
+
+    ``values`` is the *representative* value set the permutation is chosen
+    from — static pivoting's wager (HYLU, SuperLU_DIST) is that one
+    matching serves a whole refactorization stream whose values drift but
+    whose magnitude structure persists (Newton iterations, transient
+    sweeps).  Tiny-pivot perturbation + iterative refinement absorb the
+    drift; a fresh ``analyze`` re-picks the transversal when it does not.
+    """
+    rows, cols, absv = _entry_triplets(a, values)
+    perm = max_product_transversal(a, values)
+    inv = np.empty(a.n, dtype=np.int64)
+    inv[perm] = np.arange(a.n, dtype=np.int64)
+    new_rows = inv[rows]
+    order = np.lexsort((cols, new_rows))
+    indptr = np.zeros(a.n + 1, dtype=np.int64)
+    np.add.at(indptr, new_rows + 1, 1)
+    a_f = CSRMatrix(n=a.n, indptr=np.cumsum(indptr),
+                    indices=cols[order].astype(np.int32))
+    fr, fc = new_rows[order], cols[order]
+    r, c = equilibrate(a.n, fr, fc, absv[order], iters=scale_iters)
+    robust = RobustPlan(perm=perm, row_scale=r, col_scale=c,
+                        value_map=order, value_scale=r[fr] * c[fc])
+    return a_f, robust

@@ -55,7 +55,9 @@ class ServeRequest:
 class ServeResult:
     """Per-request outcome: the solution, its final relative residual,
     whether the plan came from cache, and which batched dispatch (and
-    slot) computed it."""
+    slot) computed it.  ``quality`` (engines built with ``quality=True``)
+    carries the factorization's ``repro.robust.QualityReport`` so callers
+    can gate on the verdict instead of trusting every answer."""
 
     rid: int
     x: np.ndarray
@@ -63,6 +65,7 @@ class ServeResult:
     cache_hit: bool
     batch_id: int
     slot: int
+    quality: Optional[object] = None
 
 
 class SolverEngine:
@@ -81,13 +84,18 @@ class SolverEngine:
     """
 
     def __init__(self, options: Optional[LUOptions] = None, *,
-                 capacity: int = 8, batch_slots: int = 16):
+                 capacity: int = 8, batch_slots: int = 16,
+                 quality: bool = False):
         if batch_slots <= 0:
             raise ValueError(
                 f"batch_slots must be positive, got {batch_slots}")
         self.options = options if options is not None else LUOptions()
         self.cache = PlanCache(capacity)
         self.batch_slots = batch_slots
+        # quality=True attaches a per-request QualityReport (growth /
+        # condition / verdict, DESIGN.md §15) to every ServeResult — a few
+        # extra triangular solves per dispatched slot
+        self.quality = quality
         self._queue: List[ServeRequest] = []
         self._hit_rids: set = set()
         self._next_rid = 0
@@ -95,6 +103,7 @@ class SolverEngine:
         self.stats: Dict[str, float] = {
             "requests": 0, "cache_hits": 0, "cache_misses": 0,
             "cache_evictions": 0, "batches": 0, "padded_slots": 0,
+            "quality_rejects": 0,
             "analyze_s": 0.0, "factor_s": 0.0, "solve_s": 0.0,
         }
 
@@ -104,7 +113,7 @@ class SolverEngine:
         probe) or a full ``analyze`` inserted with LRU eviction."""
         return self._plan_for(a, pattern_fingerprint(a))[0]
 
-    def _plan_for(self, a, key: PatternKey):
+    def _plan_for(self, a, key: PatternKey, values=None):
         plan = self.cache.get(key)
         if plan is not None:
             self.stats["cache_hits"] += 1
@@ -115,7 +124,10 @@ class SolverEngine:
         if _ot.ENABLED:
             _om.registry().count("serve.cache.miss")
         t0 = time.perf_counter()
-        plan = analyze(a, self.options)
+        # under static pivoting the first-seen request's values seed the
+        # transversal (first-seen per pattern wins, like the structure) —
+        # later value sets replay the same plan transform
+        plan = analyze(a, self.options, values=values)
         self.stats["analyze_s"] += time.perf_counter() - t0
         if self.cache.put(key, plan) is not None:
             self.stats["cache_evictions"] += 1
@@ -166,7 +178,8 @@ class SolverEngine:
             groups.setdefault((req.key, req.b.shape), []).append(req)
         with _ot.span("serve"):
             for (key, _shape), reqs in groups.items():
-                plan, hit = self._plan_for(reqs[0].a, key)
+                plan, hit = self._plan_for(reqs[0].a, key,
+                                           values=reqs[0].values)
                 for lo in range(0, len(reqs), self.batch_slots):
                     chunk = reqs[lo:lo + self.batch_slots]
                     self._dispatch(plan, key, chunk, hit, results)
@@ -193,10 +206,16 @@ class SolverEngine:
         self.stats["factor_s"] += t1 - t0
         self.stats["solve_s"] += time.perf_counter() - t1
         for slot, req in enumerate(chunk):
+            quality = None
+            if self.quality:
+                quality = factor.system(slot).quality()
+                if quality.verdict == "reject":
+                    self.stats["quality_rejects"] += 1
             results[req.rid] = ServeResult(
                 rid=req.rid, x=np.asarray(solved.x[slot]),
                 residual=float(solved.residuals[slot][-1]),
-                cache_hit=cache_hit, batch_id=batch_id, slot=slot)
+                cache_hit=cache_hit, batch_id=batch_id, slot=slot,
+                quality=quality)
 
     # -- one-shot convenience ----------------------------------------------
     def solve(self, a, values: np.ndarray, b: np.ndarray) -> ServeResult:

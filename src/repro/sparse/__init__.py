@@ -15,6 +15,10 @@ from repro.sparse.matrices import (
     banded_full,
     banded_random,
     bordered_block_diagonal,
+    indefinite,
+    indefinite_values_csr,
+    shuffled_dominant,
+    shuffled_dominant_values_csr,
     paper_dataset_analogue,
     PAPER_DATASETS,
 )
@@ -24,6 +28,8 @@ __all__ = [
     "CSRMatrix", "csr_from_coo", "csr_from_dense", "csr_to_ell", "transpose_csr",
     "grid2d_laplacian", "grid3d_laplacian", "circuit_like", "economic_like",
     "chemical_like", "random_pattern", "banded_full", "banded_random",
-    "bordered_block_diagonal", "paper_dataset_analogue",
+    "bordered_block_diagonal", "indefinite", "indefinite_values_csr",
+    "shuffled_dominant", "shuffled_dominant_values_csr",
+    "paper_dataset_analogue",
     "PAPER_DATASETS", "rcm_order", "permute_csr", "natural_order", "random_order",
 ]

@@ -189,6 +189,102 @@ def banded_random(n: int, *, band: int = 8, fill: float = 0.5,
     return csr_from_coo(n, rows, cols)
 
 
+def indefinite(n: int, *, band: int = 8, fill: float = 0.7,
+               seed: int = 0) -> CSRMatrix:
+    """Symmetric-structure banded pattern for *indefinite* systems
+    (saddle-point / KKT character).  The pattern alone is unremarkable —
+    pair it with ``indefinite_values_csr``, which mixes signs and zeroes
+    out periodic diagonal entries so the pivot-free sweep fails without
+    the robust tier (``LUOptions(pivot="static", perturb=True)``)."""
+    rng = np.random.default_rng(seed)
+    m = int(n * band * fill)
+    rows = rng.integers(0, n, size=m)
+    off = rng.integers(1, band + 1, size=m) * rng.choice([-1, 1], size=m)
+    cols = np.clip(rows + off, 0, n - 1)
+    rows, cols = np.concatenate([rows, cols]), np.concatenate([cols, rows])
+    rows, cols = _with_diagonal(n, rows, cols)
+    return csr_from_coo(n, rows, cols)
+
+
+def indefinite_values_csr(a: CSRMatrix, *, zero_diag_period: int = 7,
+                          seed: int = 0) -> np.ndarray:
+    """CSR-aligned values that make ``indefinite`` live up to its name:
+    sign-mixed off-diagonals, small non-dominant diagonals, and every
+    ``zero_diag_period``-th diagonal entry (including column 0) exactly
+    zero — so plain no-pivot elimination hits an exact zero pivot at
+    column 0 while the matrix itself stays generically nonsingular."""
+    rng = np.random.default_rng(seed)
+    vals = np.empty(a.nnz, dtype=np.float64)
+    for i in range(a.n):
+        lo, hi = int(a.indptr[i]), int(a.indptr[i + 1])
+        cols = a.row(i)
+        v = (rng.uniform(0.5, 1.5, size=len(cols))
+             * rng.choice([-1.0, 1.0], size=len(cols)))
+        d = np.searchsorted(cols, i)
+        if d >= len(cols) or cols[d] != i:
+            raise ValueError(f"indefinite_values_csr needs a structural "
+                             f"diagonal; row {i} has none")
+        if i % zero_diag_period == 0:
+            v[d] = 0.0
+        else:
+            v[d] = float(rng.uniform(0.05, 0.2)) * (1.0 if v[d] >= 0 else -1.0)
+        vals[lo:hi] = v
+    return vals
+
+
+def _shuffled_dominant_system(n: int, band: int, shift: int | None,
+                              seed: int):
+    """Shared builder: a diagonally dominant banded system whose rows are
+    rotated by ``shift`` — dominance lands on an off-diagonal stripe, and
+    any row whose original diagonal fell outside the band after rotation
+    gets a *structural* diagonal entry holding an exact 0.0 (so the seed
+    no-pivot path dies on an exact zero pivot, not just a tiny one)."""
+    from repro.sparse.numeric import generic_values_csr
+    if shift is None:
+        shift = band + 3
+    base = banded_random(n, band=band, fill=0.9, seed=seed)
+    vals = generic_values_csr(base, seed=seed)
+    row_of = np.repeat(np.arange(n, dtype=np.int64), np.diff(base.indptr))
+    new_rows = (row_of - shift) % n
+    cols = base.indices.astype(np.int64)
+    have_diag = np.zeros(n, dtype=bool)
+    have_diag[new_rows[new_rows == cols]] = True
+    miss = np.flatnonzero(~have_diag)
+    rows_all = np.concatenate([new_rows, miss])
+    cols_all = np.concatenate([cols, miss])
+    vals_all = np.concatenate([vals, np.zeros(len(miss))])
+    order = np.lexsort((cols_all, rows_all))
+    rows_all, cols_all, vals_all = (rows_all[order], cols_all[order],
+                                    vals_all[order])
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, rows_all + 1, 1)
+    a = CSRMatrix(n=n, indptr=np.cumsum(indptr),
+                  indices=cols_all.astype(np.int32))
+    return a, vals_all
+
+
+def shuffled_dominant(n: int, *, band: int = 6, shift: int | None = None,
+                      seed: int = 0) -> CSRMatrix:
+    """Row-rotated diagonally dominant band: structurally every diagonal is
+    present, but with ``shuffled_dominant_values_csr`` the dominant entries
+    sit ``shift`` positions off the diagonal and several diagonal values
+    are exact zeros.  The max-product transversal recovers the rotation
+    exactly, making this the canonical static-pivoting rescue case."""
+    return _shuffled_dominant_system(n, band, shift, seed)[0]
+
+
+def shuffled_dominant_values_csr(a: CSRMatrix, *, band: int = 6,
+                                 shift: int | None = None,
+                                 seed: int = 0) -> np.ndarray:
+    """Values matching ``shuffled_dominant`` called with the same
+    (n, band, shift, seed) — the two are views of one rotated system."""
+    mat, vals = _shuffled_dominant_system(a.n, band, shift, seed)
+    if mat.nnz != a.nnz or not np.array_equal(mat.indices, a.indices):
+        raise ValueError("pattern was not produced by shuffled_dominant with "
+                         "the same (n, band, shift, seed)")
+    return vals
+
+
 # ---------------------------------------------------------------------------
 # Paper Table I analogues (scaled to CPU-tractable sizes, same character).
 # key: (generator, kwargs, description)

@@ -19,21 +19,92 @@ class ZeroPivotError(ArithmeticError):
 
     Raised instead of letting numpy divide through (a silent RuntimeWarning
     that propagates inf/NaN into factor_pattern / validate_symbolic verdicts
-    on non-diagonally-dominant inputs).  ``k`` is the global pivot column.
+    on non-diagonally-dominant inputs).  ``k`` is the global pivot column;
+    the sweep that owns the failure annotates where it happened:
+    ``panel``/``level`` from the supernodal level schedule, and ``system``
+    (the batch index) when the batched-systems tier trips it.
     """
 
-    def __init__(self, k: int, piv: float, tol: float):
+    def __init__(self, k: int, piv: float, tol: float, *,
+                 panel: int | None = None, level: int | None = None,
+                 system: int | None = None):
         self.k = int(k)
         self.piv = float(piv)
         self.tol = float(tol)
-        super().__init__(
-            f"zero pivot at column {k}: |{piv:.3e}| <= tol {tol:.3e} "
-            f"(matrix needs pivoting or is singular)")
+        self.panel = None if panel is None else int(panel)
+        self.level = None if level is None else int(level)
+        self.system = None if system is None else int(system)
+        super().__init__(self._message())
+
+    def _message(self) -> str:
+        where = "".join(
+            f" {name} {val}" for name, val in
+            (("panel", self.panel), ("level", self.level),
+             ("system", self.system)) if val is not None)
+        return (f"zero pivot at column {self.k}"
+                + (f" [{where.strip()}]" if where else "")
+                + f": |{self.piv:.3e}| <= tol {self.tol:.3e} "
+                f"(matrix needs pivoting or is singular; "
+                f"LUOptions(pivot='static', perturb=True) enables the "
+                f"robust tier)")
+
+    def with_context(self, *, panel: int | None = None,
+                     level: int | None = None,
+                     system: int | None = None) -> "ZeroPivotError":
+        """Annotate in-flight attribution (sweep loops know panel/level; the
+        inner kernels don't) and refresh the message.  Returns ``self`` so
+        callers can ``raise e.with_context(...)`` without a new traceback."""
+        if panel is not None:
+            self.panel = int(panel)
+        if level is not None:
+            self.level = int(level)
+        if system is not None:
+            self.system = int(system)
+        self.args = (self._message(),)
+        return self
 
 
 def pivot_tolerance(scale: float) -> float:
     """Default near-zero pivot threshold: machine epsilon at the matrix scale."""
     return np.finfo(np.float64).eps * max(float(scale), 0.0)
+
+
+#: Default tiny-pivot perturbation magnitude relative to the matrix scale —
+#: sqrt(machine eps), the SuperLU_DIST choice: large enough that 1/piv stays
+#: harmless, small enough that one step of iterative refinement recovers the
+#: lost accuracy (DESIGN.md §15).
+PERTURB_EPS = float(np.sqrt(np.finfo(np.float64).eps))
+
+
+class PerturbState:
+    """Mutable sweep-scope accumulator for tiny-pivot perturbation.
+
+    ``threshold`` is the absolute replacement magnitude eps·‖A‖ — a scalar
+    for the single-system sweeps, a (B,) array for the batched-systems
+    tier.  ``count`` accumulates how many pivots were bumped (int or (B,)
+    int64 to match).  Non-finite pivots are never perturbed — they mean the
+    update sweep already diverged, and hiding that would corrupt the
+    factors silently.
+    """
+
+    __slots__ = ("threshold", "count")
+
+    def __init__(self, threshold):
+        if np.ndim(threshold) == 0:
+            self.threshold = float(threshold)
+            self.count = 0
+        else:
+            self.threshold = np.asarray(threshold, dtype=np.float64)
+            self.count = np.zeros(len(self.threshold), dtype=np.int64)
+
+    def total(self) -> int:
+        return int(np.sum(self.count))
+
+
+def perturb_threshold(scale: float, eps: float | None = None) -> float:
+    """Replacement magnitude for tiny pivots: ``eps·max|A|`` (``eps``
+    defaults to ``PERTURB_EPS``)."""
+    return (PERTURB_EPS if eps is None else float(eps)) * max(float(scale), 0.0)
 
 
 def check_pivot(k: int, piv: float, piv_tol: float) -> None:
@@ -99,15 +170,28 @@ def csr_matvec(a: CSRMatrix, vals: np.ndarray, x: np.ndarray) -> np.ndarray:
     return out
 
 
-def lu_inplace(m: np.ndarray, piv_tol: float, *, col0: int = 0) -> None:
+def lu_inplace(m: np.ndarray, piv_tol: float, *, col0: int = 0,
+               perturb: PerturbState | None = None) -> None:
     """In-place no-pivot right-looking elimination of the packed block ``m``
     (L strictly below, U on/above the diagonal) — shared by the dense oracle
     and the supernodal diagonal-block factor (repro.numeric).  Pivots are
     checked with ``check_pivot`` and reported at global column ``col0 + t``.
+
+    With ``perturb``, a finite pivot with |piv| <= perturb.threshold is
+    replaced by the signed threshold (sign of the pivot; +1 for an exact
+    zero) before the check — the factorization completes and iterative
+    refinement recovers the accuracy (robust tier, DESIGN.md §15).  When
+    ``perturb`` is None the float operations are exactly the historical
+    ones (bitwise-parity contract).
     """
     w = m.shape[0]
     for t in range(w):
         piv = m[t, t]
+        if (perturb is not None and perturb.threshold > 0.0
+                and np.isfinite(piv) and abs(piv) <= perturb.threshold):
+            piv = perturb.threshold if piv >= 0.0 else -perturb.threshold
+            m[t, t] = piv
+            perturb.count += 1
         check_pivot(col0 + t, piv, piv_tol)
         if t < w - 1:
             m[t + 1:, t] /= piv
@@ -115,25 +199,36 @@ def lu_inplace(m: np.ndarray, piv_tol: float, *, col0: int = 0) -> None:
 
 
 def lu_inplace_batched(m: np.ndarray, piv_tol: np.ndarray, *,
-                       col0: int = 0) -> None:
+                       col0: int = 0,
+                       perturb: PerturbState | None = None) -> None:
     """``lu_inplace`` broadcast over a leading batch axis: ``m`` is
     (B, w, w), one same-structure diagonal block per system, ``piv_tol``
     the (B,) per-system pivot threshold.  Every float op is elementwise
     (scale + outer-product update), so each slice is bitwise-identical to
     ``lu_inplace`` on that system alone — the batched tier's conformance
-    contract (DESIGN.md §14).
+    contract (DESIGN.md §14).  ``perturb`` (per-system (B,) thresholds and
+    counts) applies the same tiny-pivot replacement as the scalar kernel,
+    masked per system.
 
     Pivots are checked for every system at every column; the first failing
     (column, system) raises the same ``ZeroPivotError`` the per-system
-    sweep would.
+    sweep would, carrying the failing system index.
     """
     w = m.shape[1]
     for t in range(w):
         piv = m[:, t, t]
+        if perturb is not None:
+            thr = perturb.threshold
+            tiny = (np.isfinite(piv) & (np.abs(piv) <= thr) & (thr > 0.0))
+            if tiny.any():
+                bumped = np.where(piv >= 0.0, thr, -thr)
+                piv = np.where(tiny, bumped, piv)
+                m[:, t, t] = piv
+                perturb.count += tiny
         bad = ~np.isfinite(piv) | (np.abs(piv) <= piv_tol)
         if bad.any():
             i = int(np.flatnonzero(bad)[0])
-            raise ZeroPivotError(col0 + t, piv[i], piv_tol[i])
+            raise ZeroPivotError(col0 + t, piv[i], piv_tol[i], system=i)
         if t < w - 1:
             m[:, t + 1:, t] /= piv[:, None]
             m[:, t + 1:, t + 1:] -= (m[:, t + 1:, t, None]

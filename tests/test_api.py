@@ -24,7 +24,7 @@ from repro.numeric import numeric_factorize, solve
 from repro.sparse import (
     banded_full, banded_random, bordered_block_diagonal, chemical_like,
     circuit_like, economic_like, grid2d_laplacian, grid3d_laplacian,
-    permute_csr, random_pattern, rcm_order,
+    indefinite, permute_csr, random_pattern, rcm_order, shuffled_dominant,
 )
 from repro.sparse.numeric import (
     ZeroPivotError, generic_values, generic_values_csr,
@@ -41,6 +41,8 @@ GENERATORS = {
     "banded_full": lambda: banded_full(200, band=5),
     "random": lambda: random_pattern(160, density=0.02, seed=5),
     "bbd": lambda: bordered_block_diagonal(512, block=16, border=32, seed=6),
+    "indefinite": lambda: indefinite(160, band=6, seed=1),
+    "shuffled": lambda: shuffled_dominant(160, band=5, seed=2),
 }
 
 OPTS = LUOptions(concurrency=64, supernode_relax=2)
@@ -322,9 +324,10 @@ def test_pattern_collector_idempotent_redelivery():
 
 
 def test_version_and_exports():
-    assert repro.__version__ == "1.5.0"
+    assert repro.__version__ == "1.6.0"
     for name in ("analyze", "LUOptions", "LUPlan", "LUFactorization",
-                 "BatchedLUFactorization", "SolverEngine", "PanelPlacement"):
+                 "BatchedLUFactorization", "SolverEngine", "PanelPlacement",
+                 "RobustPlan", "QualityReport"):
         assert name in repro.__all__
         assert getattr(repro, name) is not None
     assert repro.analyze is analyze

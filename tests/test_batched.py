@@ -18,7 +18,7 @@ from repro.api import BatchedLUFactorization, LUOptions, analyze
 from repro.sparse import (
     banded_full, banded_random, bordered_block_diagonal, chemical_like,
     circuit_like, economic_like, grid2d_laplacian, grid3d_laplacian,
-    permute_csr, random_pattern, rcm_order,
+    indefinite, permute_csr, random_pattern, rcm_order, shuffled_dominant,
 )
 from repro.sparse.numeric import ZeroPivotError, generic_values_csr
 
@@ -33,6 +33,8 @@ GENERATORS = {
     "banded_full": lambda: banded_full(200, band=5),
     "random": lambda: random_pattern(160, density=0.02, seed=5),
     "bbd": lambda: bordered_block_diagonal(512, block=16, border=32, seed=6),
+    "indefinite": lambda: indefinite(160, band=6, seed=1),
+    "shuffled": lambda: shuffled_dominant(160, band=5, seed=2),
 }
 
 OPTS = LUOptions(concurrency=64, supernode_relax=2)

@@ -22,8 +22,8 @@ from repro.numeric import (
 )
 from repro.sparse import (
     banded_full, banded_random, chemical_like, circuit_like, economic_like,
-    grid2d_laplacian, grid3d_laplacian, permute_csr, random_pattern,
-    rcm_order,
+    grid2d_laplacian, grid3d_laplacian, indefinite, permute_csr,
+    random_pattern, rcm_order, shuffled_dominant,
 )
 from repro.sparse.csr import csr_from_dense
 from repro.sparse.numeric import (
@@ -40,6 +40,8 @@ GENERATORS = {
     "banded": lambda: banded_random(240, band=6, seed=4),
     "banded_full": lambda: banded_full(200, band=5),
     "random": lambda: random_pattern(160, density=0.02, seed=5),
+    "indefinite": lambda: indefinite(160, band=6, seed=1),
+    "shuffled": lambda: shuffled_dominant(160, band=5, seed=2),
 }
 
 
