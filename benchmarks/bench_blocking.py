@@ -1,0 +1,171 @@
+"""Structure-aware irregular blocking + roofline autotune (DESIGN.md §16).
+
+T2/T3 relaxed detection leaves bbd-20k with 9372 supernodes at n = 20_000,
+so the one-GEMM-per-panel sweep spends its time in per-panel dispatch
+instead of math and runs far below the roofline the PR 6 probes measure.
+The blocking merge pass coalesces near-miss adjacent structures into padded
+dense blocks when the modeled flop/byte gain pays for the explicit zeros;
+the autotune sweep picks the relax/max_size/merge knobs per matrix.
+
+Gates (both hard, both baseline-ratio-gated via ``_speedup`` keys):
+
+* ``blocking_fop_speedup`` — panel-GEMM fraction-of-peak (achieved
+  bandwidth over the probed machine peak, from the sweep's analytic
+  ``gemm.*`` counters) with blocking on must be **>= 1.2x** the unblocked
+  plan's on bbd-20k;
+* ``autotune_factorize_speedup`` — end-to-end ``plan.factorize`` with the
+  autotuned plan must be **>= 1.0x** the default-knob plan (autotuning
+  never loses).
+
+One full ``analyze`` builds the default plan; the blocked and autotuned
+variants come from ``repro.replan`` (fingerprint re-detection, no fixpoint
+re-run), which is itself the feature's amortization story — and its
+wall-clock is reported alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import print_table, progress_cb, save_artifact, timeit
+from benchmarks.roofline import machine_peaks
+from repro.api import LUOptions, analyze, replan
+from repro.obs.metrics import fraction_of_peak
+from repro.sparse import bordered_block_diagonal
+from repro.sparse.numeric import generic_values_csr
+
+GATE_FOP_SPEEDUP = 1.2
+GATE_AUTOTUNE_SPEEDUP = 1.0
+
+LARGE_N = 20_000
+LARGE_BLOCK = 16
+LARGE_BORDER = 64
+
+
+def _gemm_fraction(plan, values, peaks, repeats) -> dict:
+    """Best-of-N panel-GEMM fraction-of-peak of one plan's sweep.
+
+    The sweep's ``gemm.bytes`` are analytic (gather + GEMM operands +
+    scatter per panel) and ``gemm.seconds`` is the measured sweep wall
+    time, so achieved-bandwidth-over-peak is comparable across partitions
+    of the same matrix; best-of-N for the same reason the speedup gates
+    use ``reduce=min`` — load spikes only ever lower it.
+    """
+    from repro import obs
+
+    best = None
+    for _ in range(repeats):
+        obs.registry().reset()
+        with obs.tracing():
+            plan.factorize(values)
+        c = obs.registry().snapshot()["counters"]
+        rep = fraction_of_peak(c["gemm.bytes"], c["gemm.seconds"], peaks,
+                               flops=c["gemm.flops"])
+        rep["gemm_bytes"] = c["gemm.bytes"]
+        rep["gemm_seconds"] = c["gemm.seconds"]
+        if best is None or rep["bw_fraction"] > best["bw_fraction"]:
+            best = rep
+    return best
+
+
+def run(repeats: int = 3) -> dict:
+    peaks = machine_peaks()
+    a = bordered_block_diagonal(LARGE_N, block=LARGE_BLOCK,
+                                border=LARGE_BORDER, seed=3)
+    values = generic_values_csr(a)
+    name = f"bbd-{LARGE_N // 1000}k"
+
+    # one fixpoint, three partitions: default knobs, blocked, autotuned
+    opts = LUOptions(concurrency=512)
+    plan = analyze(a, opts, peaks=peaks,
+                   on_progress=progress_cb(f"analyze {name}"))
+    t0 = time.perf_counter()
+    blocked = replan(plan, opts.replace(blocking=True), peaks=peaks)
+    t_replan_block = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tuned = replan(plan, opts.replace(autotune=True), peaks=peaks)
+    t_replan_tune = time.perf_counter() - t0
+
+    # parity before any speedup is reported: blocked factors must solve to
+    # the same answer as the unblocked ones (merging regroups float ops, so
+    # the bound is accuracy, not bitwise).  Solve-based — the dense-oracle
+    # factor comparison lives in tests/test_blocking.py at small n; at
+    # n=20k densifying L/U would cost ~13 GB, more than a CI runner has.
+    f_def = plan.factorize(values)
+    rhs = np.random.default_rng(11).standard_normal(a.n)
+    x_def = f_def.solve(rhs).x
+    for variant, p in (("blocked", blocked), ("autotuned", tuned)):
+        res = p.factorize(values).solve(rhs)
+        err = (np.abs(res.x - x_def).max()
+               / max(1e-300, np.abs(x_def).max()))
+        if err > 1e-8 or res.residual > 1e-8:
+            raise RuntimeError(
+                f"{name}: {variant} solution diverged from the unblocked "
+                f"plan (rel err {err:.2e}, residual {res.residual:.2e})")
+
+    # panel-GEMM fraction of peak, unblocked vs blocked
+    fop_def = _gemm_fraction(plan, values, peaks, repeats)
+    fop_blk = _gemm_fraction(blocked, values, peaks, repeats)
+    fop_speedup = fop_blk["bw_fraction"] / max(1e-12,
+                                               fop_def["bw_fraction"])
+
+    # end-to-end factorize, default knobs vs autotuned (best-of-N)
+    t_def = timeit(lambda: plan.factorize(values), repeats=repeats,
+                   warmup=0, reduce=min)
+    t_tuned = timeit(lambda: tuned.factorize(values), repeats=repeats,
+                     warmup=0, reduce=min)
+    autotune_speedup = t_def / t_tuned
+
+    results = {
+        name: {
+            "n": a.n, "nnz": a.nnz, "lu_nnz": plan.lu_nnz,
+            "analyze_s": plan.analyze_s,
+            "replan_blocked_s": t_replan_block,
+            "replan_autotuned_s": t_replan_tune,
+            "panels_default": plan.n_supernodes,
+            "panels_blocked": blocked.n_supernodes,
+            "panels_autotuned": tuned.n_supernodes,
+            "pad_entries_blocked": blocked.store_template.pad_entries,
+            "tuned_chosen": tuned.tuned.chosen,
+            "tuned_modeled_s": tuned.tuned.modeled_s,
+            "tuned_baseline_modeled_s": tuned.tuned.baseline_s,
+            "fop_default": fop_def,
+            "fop_blocked": fop_blk,
+            "blocking_fop_speedup": fop_speedup,
+            "t_factorize_default_s": t_def,
+            "t_factorize_autotuned_s": t_tuned,
+            "autotune_factorize_speedup": autotune_speedup,
+        }
+    }
+    print_table(
+        "Structure-aware blocking + autotune (bbd-20k)",
+        ["partition", "panels", "gemm fop", "factorize", "vs default"],
+        [["default", plan.n_supernodes,
+          f"{fop_def['bw_fraction']:.1%}", f"{t_def*1e3:.0f}ms", "1.0x"],
+         ["blocked", blocked.n_supernodes,
+          f"{fop_blk['bw_fraction']:.1%}", "-",
+          f"{fop_speedup:.2f}x fop"],
+         ["autotuned", tuned.n_supernodes, "-",
+          f"{t_tuned*1e3:.0f}ms", f"{autotune_speedup:.2f}x"]])
+    save_artifact("bench_blocking", results)
+    if fop_speedup < GATE_FOP_SPEEDUP:
+        raise RuntimeError(
+            f"{name}: blocked panel-GEMM fraction-of-peak speedup "
+            f"{fop_speedup:.2f}x below the {GATE_FOP_SPEEDUP:.1f}x gate "
+            f"({fop_def['bw_fraction']:.2%} -> "
+            f"{fop_blk['bw_fraction']:.2%})")
+    if autotune_speedup < GATE_AUTOTUNE_SPEEDUP:
+        raise RuntimeError(
+            f"{name}: autotuned factorize {autotune_speedup:.2f}x vs the "
+            f"default knobs — autotune must never lose "
+            f"(gate {GATE_AUTOTUNE_SPEEDUP:.1f}x)")
+    return results
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

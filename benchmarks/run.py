@@ -20,6 +20,7 @@ Paper-figure map:
   roofline     -> DESIGN.md §12 (machine peak probe: STREAM triad + DGEMM)
   serve        -> DESIGN.md §14 (plan cache + batched factorize/solve tier)
   robust       -> DESIGN.md §15 (static pivoting + perturbation + quality)
+  blocking     -> DESIGN.md §16 (irregular blocking merge + roofline autotune)
 
 Exits nonzero if any selected suite fails, so CI smoke steps catch wiring rot.
 
@@ -69,6 +70,8 @@ REQUIRED_PHASES = {
     "serve": ["serve", "factorize_batch", "solve_batch"],
     "robust": ["analyze", "robust_prepass", "factorize", "solve_forward",
                "robust_quality"],
+    "blocking": ["analyze", "factorize", "replan", "blocking_merge",
+                 "autotune"],
 }
 
 
@@ -164,11 +167,12 @@ def main() -> None:
         validate_traces(only)
         return
 
-    from benchmarks import (bench_balance, bench_concurrency,
-                            bench_distributed, bench_numeric,
-                            bench_refactorize, bench_robust, bench_serve,
-                            bench_solve, bench_space, bench_speedup,
-                            bench_supernode, bench_workload, roofline)
+    from benchmarks import (bench_balance, bench_blocking,
+                            bench_concurrency, bench_distributed,
+                            bench_numeric, bench_refactorize, bench_robust,
+                            bench_serve, bench_solve, bench_space,
+                            bench_speedup, bench_supernode, bench_workload,
+                            roofline)
     suites = [
         ("workload", bench_workload.main),
         ("balance", bench_balance.main),
@@ -183,6 +187,7 @@ def main() -> None:
         ("roofline", roofline.main),
         ("serve", bench_serve.main),
         ("robust", bench_robust.main),
+        ("blocking", bench_blocking.main),
     ]
     if args.trace:
         import benchmarks.common as common

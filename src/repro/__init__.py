@@ -22,15 +22,20 @@ The legacy one-shot trio (``symbolic_factorize`` -> ``numeric_factorize``
 ``DeprecationWarning`` period; the engines remain importable from
 ``repro.core.symbolic`` and ``repro.numeric``.
 """
-__version__ = "1.6.0"
+__version__ = "1.7.0"
 
 _LAZY_EXPORTS = {
     # plan/factor session API (the supported surface)
     "analyze": "repro.api",
+    "replan": "repro.api",
     "LUOptions": "repro.api",
     "LUPlan": "repro.api",
     "LUFactorization": "repro.api",
     "BatchedLUFactorization": "repro.api",
+    # roofline autotune + structure-aware blocking (DESIGN.md §16)
+    "RooflineCostModel": "repro.tune",
+    "TuneReport": "repro.tune",
+    "BlockingStats": "repro.supernodes",
     # serving front end (DESIGN.md §14)
     "SolverEngine": "repro.serve",
     "PlanCache": "repro.serve",

@@ -103,6 +103,22 @@ class LUOptions:
     Supernodes: ``supernode_relax`` (T3 merge tolerance, 0 = exact T2),
     ``supernode_max_size`` (panel width cap).
 
+    Blocking / autotune (DESIGN.md §16): ``blocking=True`` runs the
+    structure-aware irregular merge pass after detection — adjacent
+    supernodes with nearly-overlapping row structures coalesce into one
+    padded dense block when the roofline cost model says the flop/byte
+    gain pays for the explicit zeros (``block_merge_threshold``, default
+    1.0 = accept exactly the modeled wins; ``block_max_width`` caps the
+    merged panel).  ``autotune=True`` goes further and sweeps
+    ``supernode_relax``/``supernode_max_size`` candidates (re-detected
+    from the retained fingerprints, no fixpoint re-run) through that
+    merge pass, freezing the winning knobs — including a
+    ``concurrency`` sized to the label-matrix byte budget — onto the
+    plan's options (``LUPlan.tuned`` records the sweep).  Both off by
+    default: the defaults are bitwise-identical to the unblocked
+    pipeline; blocked partitions regroup float ops and carry
+    dense-oracle parity instead.
+
     Numeric: ``n_bins``/``policy`` (pack_panels within-level grouping),
     ``numeric_backend`` ("numpy" float64 BLAS or "kernel" Pallas MXU),
     ``piv_tol`` (zero-pivot threshold; None = eps at matrix scale),
@@ -138,6 +154,12 @@ class LUOptions:
     # -- supernode detection
     supernode_relax: int = 0
     supernode_max_size: int = 64
+    # -- structure-aware blocking + roofline autotune (DESIGN.md §16);
+    # both off by default (bitwise-identical to the unblocked pipeline)
+    blocking: bool = False
+    block_merge_threshold: Optional[float] = None   # None = 1.0 (model wins)
+    block_max_width: int = 256
+    autotune: bool = False
     # -- numeric factorization
     n_bins: int = 8
     policy: str = "lpt"
@@ -171,6 +193,43 @@ class LUOptions:
     trace: bool = False
 
     def __post_init__(self):
+        # Range-check the numeric knobs up front with actionable messages —
+        # a bad value would otherwise surface deep inside the fixpoint
+        # chunking or panel packing as an opaque shape/index error.
+        if self.concurrency < 1:
+            raise ValueError(
+                f"concurrency must be >= 1 (source-chunk width of the "
+                f"symbolic fixpoint), got {self.concurrency}")
+        if self.supernode_max_size < 1:
+            raise ValueError(
+                f"supernode_max_size must be >= 1 (panel width cap; 1 "
+                f"disables supernode fusion), got {self.supernode_max_size}")
+        if self.supernode_relax < 0:
+            raise ValueError(
+                f"supernode_relax must be >= 0 (T3 merge tolerance; 0 is "
+                f"exact T2), got {self.supernode_relax}")
+        if self.n_bins < 1:
+            raise ValueError(
+                f"n_bins must be >= 1 (pack_panels bins per level), "
+                f"got {self.n_bins}")
+        if self.refine_iters < 0:
+            raise ValueError(
+                f"refine_iters must be >= 0 (0 disables iterative "
+                f"refinement), got {self.refine_iters}")
+        if self.budget_bytes is not None and self.budget_bytes < 1:
+            raise ValueError(
+                f"budget_bytes must be >= 1 when set (memory envelope for "
+                f"the fixpoint working set), got {self.budget_bytes}")
+        if self.block_max_width < 1:
+            raise ValueError(
+                f"block_max_width must be >= 1 (merged-panel column cap "
+                f"for blocking/autotune), got {self.block_max_width}")
+        if (self.block_merge_threshold is not None
+                and not self.block_merge_threshold > 0.0):
+            raise ValueError(
+                f"block_merge_threshold must be > 0 when set (1.0 accepts "
+                f"exactly the modeled wins; larger merges more "
+                f"aggressively), got {self.block_merge_threshold!r}")
         if self.backend not in _SYMBOLIC_BACKENDS:
             raise ValueError(f"unknown symbolic backend {self.backend!r}; "
                              f"pick from {_SYMBOLIC_BACKENDS}")
@@ -387,6 +446,10 @@ class LUPlan:
     # symbolic analysis actually ran on.  Plain numpy — the plan pickles.
     robust: Optional[object] = None
     factored: Optional[CSRMatrix] = None
+    # autotune record (DESIGN.md §16, ``LUOptions(autotune=True)``): the
+    # ``tune.TuneReport`` whose chosen knob values are frozen into
+    # ``options`` — picklable, so a loaded plan replays without re-tuning
+    tuned: Optional[object] = None
 
     @property
     def a_factored(self) -> CSRMatrix:
@@ -538,9 +601,37 @@ class LUPlan:
         return res
 
 
+def _partition_with_blocking(pattern, supernodes, fingerprints, opts,
+                             peaks):
+    """Apply autotune / structure-aware blocking to a detected partition.
+
+    Returns ``(supernodes, tuned, opts)``: the (possibly merged) partition,
+    the ``TuneReport`` when autotuning ran, and the options with any chosen
+    knob values frozen in.  A no-op (same objects back) when both knobs are
+    off — the default path never touches the new code.
+    """
+    tuned = None
+    if opts.autotune:
+        from repro.tune import autotune_partition
+
+        supernodes, tuned = autotune_partition(pattern, fingerprints, opts,
+                                               peaks=peaks)
+        opts = opts.replace(**tuned.chosen)
+    elif opts.blocking:
+        from repro.supernodes.blocking import merge_supernodes
+        from repro.tune import cost_model_for
+
+        threshold = (1.0 if opts.block_merge_threshold is None
+                     else opts.block_merge_threshold)
+        supernodes, _ = merge_supernodes(
+            pattern, supernodes, cost_model_for(opts, peaks),
+            threshold=threshold, max_width=opts.block_max_width)
+    return supernodes, tuned, opts
+
+
 def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
             values: Optional[np.ndarray] = None,
-            mesh=None, on_progress=None) -> LUPlan:
+            mesh=None, on_progress=None, peaks=None) -> LUPlan:
     """Symbolic analysis of ``a``: one fixpoint pass streams out the L/U
     counts, the supernode partition (fingerprints), and the sparse
     ``CSCPattern``; everything value-independent downstream (schedules,
@@ -570,6 +661,15 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
     the permuted pattern.  The transform is a plan property
     (``LUPlan.robust``), so refactorization remains a value-only O(nnz)
     gather + scale.
+
+    With ``LUOptions(blocking=True)`` / ``LUOptions(autotune=True)`` the
+    detected supernode partition additionally runs through the
+    structure-aware blocking merge pass / roofline knob sweep (DESIGN.md
+    §16) before schedules and storage are built; ``peaks`` optionally
+    feeds the cost model a probed ``benchmarks/roofline.py``
+    ``machine_peaks()`` dict (fixed representative constants otherwise, so
+    tuning stays deterministic).  ``repro.replan`` re-derives all of this
+    on an existing plan without re-running the fixpoint.
     """
     t0 = time.perf_counter()
     opts = options if options is not None else LUOptions()
@@ -600,8 +700,10 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
                 collect_pattern=True, mesh=mesh, runtime=opts.runtime,
                 on_progress=on_progress)
             pattern = sym.pattern
+            supernodes, tuned, opts = _partition_with_blocking(
+                pattern, sym.supernodes, sym.fingerprints, opts, peaks)
             with _ot.span("build_schedule"):
-                schedule = build_schedule(pattern, sym.supernodes,
+                schedule = build_schedule(pattern, supernodes,
                                           n_bins=opts.n_bins,
                                           policy=opts.policy)
                 store_template = PanelStore(pattern, schedule.supernodes)
@@ -632,4 +734,70 @@ def analyze(a: CSRMatrix, options: Optional[LUOptions] = None, *,
                   analyze_s=time.perf_counter() - t0,
                   placement=placement, stats=stats,
                   robust=robust,
-                  factored=a_sym if robust is not None else None)
+                  factored=a_sym if robust is not None else None,
+                  tuned=tuned)
+
+
+def replan(plan: LUPlan, options: Optional[LUOptions] = None, *,
+           peaks=None) -> LUPlan:
+    """Re-derive a plan under new partition knobs WITHOUT re-running the
+    symbolic fixpoint (DESIGN.md §16).
+
+    The expensive part of ``analyze`` is the label fixpoint; the supernode
+    partition, schedules, gather/scatter maps, storage template, and solve
+    DAGs are all cheap derivations from the retained O(n) column
+    fingerprints and the sparse pattern.  ``replan`` re-runs exactly those
+    derivations for ``options`` (defaults to the plan's own) — including
+    the blocking merge pass and the autotune sweep — so comparing blocked
+    vs. unblocked partitions, or autotuning a plan analyzed with defaults,
+    costs seconds instead of the full analyze.  Returns a NEW independent
+    ``LUPlan`` (the input plan is untouched); with knobs equal to the
+    plan's own, the result factorizes bitwise-identically.
+
+    Placement is re-derived at the plan's device count when one exists.
+    Raises ``ValueError`` for plans pickled before fingerprint retention
+    (pre-v1.7.0).
+    """
+    t0 = time.perf_counter()
+    opts = options if options is not None else plan.options
+    fp = getattr(plan.sym, "fingerprints", None)
+    if fp is None:
+        raise ValueError(
+            "plan retains no column fingerprints (analyzed before v1.7.0, "
+            "or symbolic ran without supernode detection); re-run "
+            "repro.analyze() to rebuild it")
+    pattern = plan.pattern
+    with _ot.ensure(opts.trace) as tr:
+        mark = tr.mark() if tr is not None else 0
+        with _ot.span("replan"):
+            from repro.supernodes.detect import detect_from_fingerprints
+
+            supernodes = detect_from_fingerprints(
+                fp, relax=opts.supernode_relax,
+                max_size=opts.supernode_max_size)
+            supernodes, tuned, opts = _partition_with_blocking(
+                pattern, supernodes, fp, opts, peaks)
+            with _ot.span("build_schedule"):
+                schedule = build_schedule(pattern, supernodes,
+                                          n_bins=opts.n_bins,
+                                          policy=opts.policy)
+                store_template = PanelStore(pattern, schedule.supernodes)
+            with _ot.span("gather_maps"):
+                gather_maps = build_gather_maps(store_template, schedule)
+                csr_maps = store_template.csr_maps(plan.a_factored)
+            with _ot.span("solve_schedule"):
+                solve_schedule = build_solve_schedule(store_template)
+            placement = None
+            if plan.placement is not None:
+                placement = build_placement(schedule,
+                                            plan.placement.n_devices,
+                                            axis=plan.placement.axis)
+        stats = tr.summary(mark) if tr is not None else None
+    return LUPlan(a=plan.a, options=opts, sym=plan.sym, pattern=pattern,
+                  schedule=schedule, store_template=store_template,
+                  gather_maps=gather_maps, csr_maps=csr_maps,
+                  solve_schedule=solve_schedule,
+                  analyze_s=plan.analyze_s + (time.perf_counter() - t0),
+                  placement=placement, stats=stats,
+                  robust=plan.robust, factored=plan.factored,
+                  tuned=tuned)

@@ -42,6 +42,11 @@ class SymbolicResult:
     # sparse L+U pattern streamed from the fixpoint (collect_pattern=True) —
     # a storage.CSCPattern; the large-n path's replacement for dense_pattern
     pattern: Optional[object] = None
+    # merged per-column fingerprints (detect_supernodes=True) — a
+    # supernodes.ColumnFingerprints, O(n) and picklable.  Retained so
+    # autotune/replan can re-detect partitions under different relax /
+    # max_size knobs without re-running the fixpoint (DESIGN.md §16).
+    fingerprints: Optional[object] = None
 
     @property
     def lu_nnz(self) -> int:
@@ -256,6 +261,7 @@ def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
     sn_ranges = None
     sn_count = 0
     sn_mean = 0.0
+    fp = None
     if fp_shards is not None:
         from repro.supernodes import detect_from_fingerprints, supernode_stats
 
@@ -287,6 +293,7 @@ def _symbolic_factorize_distributed(a: CSRMatrix, graph: SymbolicGraph,
         supernodes=sn_ranges, n_supernodes=sn_count,
         mean_supernode_size=sn_mean,
         pattern=collector.to_csc() if collector is not None else None,
+        fingerprints=fp,
     )
     res.dist = getattr(ms, "dist", None)       # type: ignore[attr-defined]
     _record_fill_metrics(res, a)
@@ -499,6 +506,7 @@ def symbolic_factorize(a: CSRMatrix, *, concurrency: int = 128,
         supernodes=sn_ranges, n_supernodes=sn_count,
         mean_supernode_size=sn_mean,
         pattern=collector.to_csc() if collector is not None else None,
+        fingerprints=fp,
     )
     if runtime_stats is not None:
         out.runtime = runtime_stats            # type: ignore[attr-defined]

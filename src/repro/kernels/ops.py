@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref as _ref
 from repro.kernels.gsofa_relax import minmax_relax_pallas
@@ -28,6 +29,33 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
+
+
+def padded_gemm_shape(m, k, n, *, block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128):
+    """Padded ``(M, K, N)`` that ``panel_update`` actually dispatches for a
+    logical ``m x k @ k x n`` update.
+
+    Mirrors the block-sizing in :func:`panel_update` (sublane multiples of 8
+    on M, lane multiples of 128 on K/N) so cost models can charge the
+    explicit-zero MXU work instead of the logical shape.  Accepts scalars or
+    numpy arrays (vectorised over candidate partitions); zero-sized operands
+    stay zero since those dispatches are skipped entirely.
+    """
+    m_ = np.asarray(m, dtype=np.int64)
+    k_ = np.asarray(k, dtype=np.int64)
+    n_ = np.asarray(n, dtype=np.int64)
+    bm = np.minimum(block_m, np.maximum(8, ((m_ + 7) // 8) * 8))
+    bk = np.minimum(block_k, np.maximum(128, ((k_ + 127) // 128) * 128))
+    bn = np.minimum(block_n, np.maximum(128, ((n_ + 127) // 128) * 128))
+    mp = np.where(m_ > 0, ((m_ + bm - 1) // np.maximum(bm, 1)) * bm, 0)
+    kp = np.where(k_ > 0, ((k_ + bk - 1) // np.maximum(bk, 1)) * bk, 0)
+    np_ = np.where(n_ > 0, ((n_ + bn - 1) // np.maximum(bn, 1)) * bn, 0)
+    dead = (m_ == 0) | (k_ == 0) | (n_ == 0)
+    mp, kp, np_ = (np.where(dead, 0, x) for x in (mp, kp, np_))
+    if np.isscalar(m) and np.isscalar(k) and np.isscalar(n):
+        return int(mp), int(kp), int(np_)
+    return mp, kp, np_
 
 
 def minmax_relax(prop: jax.Array, adj: jax.Array, *, block_s: int = 8,

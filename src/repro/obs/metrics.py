@@ -24,6 +24,14 @@ gemm.seconds                    counter   wall seconds of the panel sweep
 robust.perturbed_pivots         counter   tiny pivots bumped by the sweep
 robust.growth                   gauge     element growth max|L\\U|/max|A_f|
 robust.cond_estimate            gauge     Hager cond_1 estimate (-1 = inf)
+blocking.merges                 counter   supernode pairs coalesced by blocking
+blocking.panels_before          gauge     panels entering the merge pass
+blocking.panels_after           gauge     panels after structure-aware merging
+blocking.pad_entries            gauge     explicit zeros the merged blocks carry
+blocking.modeled_gain_s         gauge     modeled sweep seconds saved by merging
+tune.candidates                 counter   partitions scored by the autotune sweep
+tune.modeled_s                  gauge     modeled sweep seconds of the chosen
+tune.baseline_s                 gauge     modeled seconds of the untuned knobs
 ==============================  ========  =====================================
 
 Roofline: ``fraction_of_peak`` / ``roofline_report`` are pure functions of

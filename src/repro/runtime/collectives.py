@@ -38,9 +38,23 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
-from repro.train.compress import dequantize, quantize
 
 _RING_OPS = ("add", "xor", "max")
+
+
+def quantize(g: jax.Array) -> "tuple[jax.Array, jax.Array]":
+    """Int8 wire format of one ring hop: max-abs/127 scale, symmetric
+    rounding.  The live sparse runtime owns its wire codec (the train tree
+    keeps an identical pair for its optimizer-boundary demo — the runtime
+    must not depend on that substrate)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
 
 
 def _combine(op: str, a: jax.Array, b: jax.Array) -> jax.Array:

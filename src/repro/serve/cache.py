@@ -17,6 +17,7 @@ another process hits today.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Optional, Tuple
 
@@ -58,6 +59,14 @@ class PlanCache:
     ``get`` refreshes recency; ``put`` evicts the least-recently-used
     entry beyond ``capacity``.  Pure container — hit/miss/evict counters
     live on the ``SolverEngine`` so the cache stays trivially testable.
+
+    Thread-safe: a serving engine naturally sees concurrent
+    ``submit``/``flush`` from request threads, and the recency bookkeeping
+    is a read-modify-write on the underlying ``OrderedDict`` (``get`` moves
+    the key, ``put`` may pop an LRU victim) — unlocked interleavings can
+    double-evict or corrupt the recency order.  Every public method holds
+    one internal lock; the lock never wraps plan construction, only the
+    O(1) dict transitions, so analyze-scale work stays outside it.
     """
 
     def __init__(self, capacity: int = 8):
@@ -65,30 +74,36 @@ class PlanCache:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.capacity = capacity
         self._entries: "OrderedDict[PatternKey, object]" = OrderedDict()
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: PatternKey) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def keys(self) -> Tuple[PatternKey, ...]:
         """Keys in eviction order (least recently used first)."""
-        return tuple(self._entries.keys())
+        with self._lock:
+            return tuple(self._entries.keys())
 
     def get(self, key: PatternKey) -> Optional[object]:
         """The cached plan for ``key`` (refreshing its recency), or None."""
-        plan = self._entries.get(key)
-        if plan is not None:
-            self._entries.move_to_end(key)
-        return plan
+        with self._lock:
+            plan = self._entries.get(key)
+            if plan is not None:
+                self._entries.move_to_end(key)
+            return plan
 
     def put(self, key: PatternKey, plan) -> Optional[PatternKey]:
         """Insert/refresh ``key``; returns the evicted key if the insert
         pushed an LRU entry out, else None."""
-        self._entries[key] = plan
-        self._entries.move_to_end(key)
-        if len(self._entries) > self.capacity:
-            evicted, _ = self._entries.popitem(last=False)
-            return evicted
-        return None
+        with self._lock:
+            self._entries[key] = plan
+            self._entries.move_to_end(key)
+            if len(self._entries) > self.capacity:
+                evicted, _ = self._entries.popitem(last=False)
+                return evicted
+            return None

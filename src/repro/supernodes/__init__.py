@@ -20,10 +20,14 @@ from repro.supernodes.detect import (
 from repro.supernodes.balance import (
     PanelPartition, pack_panels, supernode_weights,
 )
+from repro.supernodes.blocking import (
+    BlockingStats, merge_supernodes, partition_stats,
+)
 
 __all__ = [
     "ColumnFingerprints", "fingerprints_from_graph", "mix1", "mix2",
     "detect_from_fingerprints", "detect_supernodes_batched", "merge_flags",
     "ranges_from_flags", "supernode_stats",
     "PanelPartition", "pack_panels", "supernode_weights",
+    "BlockingStats", "merge_supernodes", "partition_stats",
 ]

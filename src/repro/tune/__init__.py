@@ -1,0 +1,22 @@
+"""Roofline-driven autotuning of the analyze-time knobs (DESIGN.md §16).
+
+``model.py`` owns the roofline cost model — modeled seconds of one
+supernodal panel from its GEMM shape against machine peaks plus a
+per-dispatch overhead term; ``autotune.py`` sweeps candidate supernode
+partitions (re-detected from the retained column fingerprints, so no
+fixpoint re-run) through the structure-aware blocking merge pass
+(``supernodes/blocking.py``) and freezes the winning knob values onto the
+plan.  ``repro`` never imports from ``benchmarks`` — the bench layer passes
+its probed ``machine_peaks()`` dict *in*; without one the model falls back
+to fixed representative constants so autotune decisions stay deterministic
+across processes (a pickled autotuned plan replays bitwise anywhere).
+"""
+from repro.tune.model import RooflineCostModel, cost_model_for
+from repro.tune.autotune import (
+    TuneReport, autotune_partition, choose_concurrency,
+)
+
+__all__ = [
+    "RooflineCostModel", "cost_model_for",
+    "TuneReport", "autotune_partition", "choose_concurrency",
+]

@@ -223,6 +223,40 @@ def test_options_reject_unknown_backends():
         LUOptions(policy="nope")
 
 
+def test_options_reject_nonpositive_sizes():
+    """Nonsensical knob values fail fast with actionable messages instead
+    of surfacing as opaque shape/index errors deep in the pipeline."""
+    with pytest.raises(ValueError, match="concurrency must be >= 1"):
+        LUOptions(concurrency=0)
+    with pytest.raises(ValueError, match="concurrency must be >= 1"):
+        LUOptions(concurrency=-8)
+    with pytest.raises(ValueError, match="supernode_max_size must be >= 1"):
+        LUOptions(supernode_max_size=0)
+    with pytest.raises(ValueError, match="supernode_relax must be >= 0"):
+        LUOptions(supernode_relax=-1)
+    with pytest.raises(ValueError, match="n_bins must be >= 1"):
+        LUOptions(n_bins=0)
+    with pytest.raises(ValueError, match="refine_iters must be >= 0"):
+        LUOptions(refine_iters=-1)
+    with pytest.raises(ValueError, match="budget_bytes must be >= 1"):
+        LUOptions(budget_bytes=0)
+    with pytest.raises(ValueError, match="perturb_eps must be positive"):
+        LUOptions(perturb_eps=0.0)
+
+
+def test_options_reject_bad_blocking_knobs():
+    with pytest.raises(ValueError, match="block_max_width must be >= 1"):
+        LUOptions(block_max_width=0)
+    with pytest.raises(ValueError, match="block_merge_threshold must be > 0"):
+        LUOptions(block_merge_threshold=0.0)
+    with pytest.raises(ValueError, match="block_merge_threshold must be > 0"):
+        LUOptions(block_merge_threshold=-1.5)
+    # valid combinations construct fine
+    assert LUOptions(blocking=True, block_max_width=1).block_max_width == 1
+    assert LUOptions(autotune=True,
+                     block_merge_threshold=1.25).block_merge_threshold == 1.25
+
+
 def test_options_replace():
     opts = LUOptions()
     opts2 = opts.replace(supernode_relax=3)
@@ -324,10 +358,11 @@ def test_pattern_collector_idempotent_redelivery():
 
 
 def test_version_and_exports():
-    assert repro.__version__ == "1.6.0"
-    for name in ("analyze", "LUOptions", "LUPlan", "LUFactorization",
-                 "BatchedLUFactorization", "SolverEngine", "PanelPlacement",
-                 "RobustPlan", "QualityReport"):
+    assert repro.__version__ == "1.7.0"
+    for name in ("analyze", "replan", "LUOptions", "LUPlan",
+                 "LUFactorization", "BatchedLUFactorization", "SolverEngine",
+                 "PanelPlacement", "RobustPlan", "QualityReport",
+                 "RooflineCostModel", "TuneReport", "BlockingStats"):
         assert name in repro.__all__
         assert getattr(repro, name) is not None
     assert repro.analyze is analyze

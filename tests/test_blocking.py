@@ -1,0 +1,282 @@
+"""Structure-aware irregular blocking + roofline autotune (DESIGN.md §16).
+
+Contract: the merge pass emits a valid contiguous partition whose merged
+panels keep padded entries exactly zero; blocked and autotuned factors hold
+dense-oracle parity on every generator (merging regroups float ops, so the
+gate is the oracle, not bitwise); ``repro.replan`` with the plan's own
+knobs reproduces its factors bitwise and never re-runs the fixpoint; the
+cost model and ``choose_concurrency`` are deterministic pure functions; and
+the ``blocking.*`` / ``tune.*`` metrics land in the registry when tracing.
+"""
+import pickle
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import LUOptions, analyze, replan
+from repro.kernels.ops import padded_gemm_shape
+from repro.sparse import (
+    banded_full, banded_random, bordered_block_diagonal, chemical_like,
+    circuit_like, economic_like, grid2d_laplacian, grid3d_laplacian,
+    indefinite, permute_csr, random_pattern, rcm_order, shuffled_dominant,
+)
+from repro.sparse.numeric import generic_values_csr, lu_nopivot
+from repro.supernodes.blocking import (
+    BlockingStats, merge_supernodes, partition_stats,
+)
+from repro.tune import (
+    RooflineCostModel, autotune_partition, choose_concurrency,
+    cost_model_for,
+)
+
+GENERATORS = {
+    "grid2d": lambda: grid2d_laplacian(14),
+    "grid3d": lambda: grid3d_laplacian(6),
+    "circuit": lambda: circuit_like(300, seed=7),
+    "economic": lambda: economic_like(256, block=16, seed=2),
+    "chemical": lambda: chemical_like(320, stage=16, seed=3),
+    "banded": lambda: banded_random(240, band=6, seed=4),
+    "banded_full": lambda: banded_full(200, band=5),
+    "random": lambda: random_pattern(160, density=0.02, seed=5),
+    "bbd": lambda: bordered_block_diagonal(512, block=16, border=32, seed=6),
+    "indefinite": lambda: indefinite(160, band=6, seed=1),
+    "shuffled": lambda: shuffled_dominant(160, band=5, seed=2),
+}
+
+OPTS = LUOptions(concurrency=64, supernode_relax=2)
+
+
+def _matrix(name):
+    a = GENERATORS[name]()
+    return permute_csr(a, rcm_order(a))
+
+
+def _dense(a, values):
+    out = np.zeros((a.n, a.n))
+    for i in range(a.n):
+        out[i, a.indices[a.indptr[i]:a.indptr[i + 1]]] = \
+            values[a.indptr[i]:a.indptr[i + 1]]
+    return out
+
+
+def _rel_err(got, ref):
+    scale = max(1.0, np.abs(ref).max())
+    return np.abs(got - ref).max() / scale
+
+
+@pytest.fixture(scope="module")
+def plans():
+    """One default analysis per generator; blocked/tuned variants replan
+    from it (no fixpoint re-run), mirroring the bench harness."""
+    return {name: analyze(_matrix(name), OPTS) for name in GENERATORS}
+
+
+# ---------------------------------------------------------------------------
+# property: blocked + autotuned factors hold dense-oracle parity everywhere
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_blocked_factors_match_dense_oracle(name, plans):
+    plan = plans[name]
+    values = generic_values_csr(plan.a)
+    blocked = replan(plan, OPTS.replace(blocking=True))
+    assert blocked.n_supernodes <= plan.n_supernodes
+    factor = blocked.factorize(values)
+    l0, u0 = lu_nopivot(_dense(plan.a, values))
+    assert _rel_err(factor.l, l0) <= 1e-10
+    assert _rel_err(factor.u, u0) <= 1e-10
+
+
+@pytest.mark.parametrize("name", sorted(GENERATORS))
+def test_autotuned_factors_match_dense_oracle(name, plans):
+    plan = plans[name]
+    values = generic_values_csr(plan.a)
+    tuned = replan(plan, OPTS.replace(autotune=True))
+    factor = tuned.factorize(values)
+    l0, u0 = lu_nopivot(_dense(plan.a, values))
+    assert _rel_err(factor.l, l0) <= 1e-10
+    assert _rel_err(factor.u, u0) <= 1e-10
+    # the sweep's chosen knobs are frozen onto the plan's options
+    assert tuned.tuned is not None
+    assert tuned.options.blocking is True
+    assert tuned.options.supernode_relax == \
+        tuned.tuned.chosen["supernode_relax"]
+    # the model never prefers a partition it scores above the untuned one
+    assert tuned.tuned.modeled_s <= tuned.tuned.baseline_s + 1e-12
+
+
+@pytest.mark.parametrize("name", ["grid2d", "circuit", "bbd"])
+def test_blocked_solve_matches_default_solution(name, plans):
+    plan = plans[name]
+    values = generic_values_csr(plan.a)
+    b = np.random.default_rng(0).standard_normal(plan.n)
+    x0 = plan.factorize(values).solve(b).x
+    xb = replan(plan, OPTS.replace(blocking=True)).factorize(values).solve(b).x
+    scale = max(1.0, np.abs(x0).max())
+    assert np.abs(xb - x0).max() / scale <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# replan: same knobs -> bitwise; fingerprint retention contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["grid2d", "circuit", "bbd"])
+def test_replan_same_knobs_is_bitwise(name, plans):
+    plan = plans[name]
+    values = generic_values_csr(plan.a)
+    ref = plan.factorize(values)
+    got = replan(plan).factorize(values)
+    for b_ref, b_got in zip(ref.num.store.blocks, got.num.store.blocks):
+        assert np.array_equal(b_ref, b_got)
+    b = np.random.default_rng(1).standard_normal(plan.n)
+    assert np.array_equal(ref.solve(b).x, got.solve(b).x)
+
+
+def test_replan_without_fingerprints_raises(plans):
+    plan = plans["grid2d"]
+    import dataclasses as _dc
+
+    stripped = _dc.replace(plan.sym, fingerprints=None)
+    crippled = _dc.replace(plan, sym=stripped)
+    with pytest.raises(ValueError, match="fingerprints"):
+        replan(crippled)
+
+
+def test_plan_retains_picklable_fingerprints(plans):
+    plan = plans["circuit"]
+    assert plan.sym.fingerprints is not None
+    fp2 = pickle.loads(pickle.dumps(plan.sym.fingerprints))
+    assert np.array_equal(fp2.counts, plan.sym.fingerprints.counts)
+    assert np.array_equal(fp2.hxor, plan.sym.fingerprints.hxor)
+
+
+def test_blocked_plan_pickle_roundtrip_is_bitwise(plans):
+    plan = plans["bbd"]
+    values = generic_values_csr(plan.a)
+    blocked = replan(plan, OPTS.replace(blocking=True))
+    ref = blocked.factorize(values)
+    got = pickle.loads(pickle.dumps(blocked)).factorize(values)
+    for b_ref, b_got in zip(ref.num.store.blocks, got.num.store.blocks):
+        assert np.array_equal(b_ref, b_got)
+
+
+# ---------------------------------------------------------------------------
+# merge pass: partition validity, padding stays exactly zero, stats
+# ---------------------------------------------------------------------------
+
+def test_merge_emits_valid_contiguous_partition(plans):
+    plan = plans["bbd"]
+    model = RooflineCostModel()
+    merged, stats = merge_supernodes(plan.pattern, plan.sym.supernodes,
+                                     model, max_width=64)
+    assert isinstance(stats, BlockingStats)
+    assert merged[0][0] == 0 and merged[-1][1] == plan.n
+    assert (merged[1:, 0] == merged[:-1, 1]).all()      # contiguous cover
+    assert (merged[:, 1] - merged[:, 0] <= 64).all()    # max_width respected
+    assert stats.n_before - stats.merges == stats.n_after
+    assert stats.modeled_after_s <= stats.modeled_before_s + 1e-12
+    assert stats.pad_entries_after >= stats.pad_entries_before
+
+
+def test_merge_threshold_below_one_merges_less(plans):
+    plan = plans["bbd"]
+    model = RooflineCostModel()
+    loose, _ = merge_supernodes(plan.pattern, plan.sym.supernodes, model,
+                                threshold=1.0)
+    strict, _ = merge_supernodes(plan.pattern, plan.sym.supernodes, model,
+                                 threshold=1e-9)
+    assert len(strict) >= len(loose)
+    # a vanishing threshold accepts (essentially) no merges
+    assert len(strict) == len(plan.sym.supernodes)
+
+
+def test_blocked_padding_is_exactly_zero(plans):
+    plan = plans["circuit"]
+    values = generic_values_csr(plan.a)
+    blocked = replan(plan, OPTS.replace(blocking=True))
+    factor = blocked.factorize(values)
+    store = factor.num.store
+    assert store.pad_entries > 0          # merging did introduce padding
+    for blk, mask in zip(store.blocks, store.in_pattern):
+        assert not blk[~mask].any()       # padded slots exactly zero
+
+
+def test_partition_stats_match_store(plans):
+    plan = plans["grid2d"]
+    stats = partition_stats(plan.pattern, plan.schedule.supernodes)
+    store = plan.store_template
+    for i, (s, e) in enumerate(plan.schedule.supernodes):
+        assert stats["w"][i] == e - s
+        assert stats["m"][i] + stats["k"][i] == len(store.rows[i])
+    assert stats["pad_entries"].sum() == store.pad_entries
+
+
+# ---------------------------------------------------------------------------
+# cost model + concurrency chooser: deterministic pure functions
+# ---------------------------------------------------------------------------
+
+def test_cost_model_roofline_behavior():
+    model = RooflineCostModel(mem_bw_gbs=10.0, flops_gflops=50.0,
+                              dispatch_overhead_s=0.0)
+    # tiny GEMM: bandwidth-bound -> time == bytes / bw
+    t = model.gemm_time(8, 8, 8)
+    assert t == pytest.approx(8 * (64 + 64 + 128) / 10e9)
+    # huge cubic GEMM: compute-bound -> time == flops / peak
+    t = model.gemm_time(2048, 2048, 2048)
+    assert t == pytest.approx(2 * 2048 ** 3 / 50e9)
+    # vectorized call matches scalar calls elementwise
+    m = np.array([8, 2048]); k = np.array([8, 2048]); w = np.array([8, 2048])
+    vec = model.gemm_time(m, k, w)
+    assert vec[0] == pytest.approx(model.gemm_time(8, 8, 8))
+    assert vec[1] == pytest.approx(model.gemm_time(2048, 2048, 2048))
+
+
+def test_cost_model_from_peaks_and_kernel_padding():
+    peaks = {"mem_bw_gbs": 100.0, "flops_gflops": 1000.0}
+    model = cost_model_for(LUOptions(numeric_backend="kernel"), peaks)
+    assert model.mem_bw_gbs == 100.0 and model.backend == "kernel"
+    # kernel backend charges the padded MXU shape, so it costs at least
+    # as much as the logical shape the numpy model charges
+    logical = RooflineCostModel(mem_bw_gbs=100.0, flops_gflops=1000.0)
+    assert model.gemm_time(5, 3, 7) >= logical.gemm_time(5, 3, 7)
+
+
+def test_padded_gemm_shape_multiples():
+    assert padded_gemm_shape(5, 3, 7) == (8, 128, 128)
+    assert padded_gemm_shape(130, 128, 128) == (256, 128, 128)
+    assert padded_gemm_shape(0, 3, 7) == (0, 0, 0)
+    m, k, n = padded_gemm_shape(np.array([5, 130]), np.array([3, 128]),
+                                np.array([7, 128]))
+    assert list(m) == [8, 256] and list(k) == [128, 128]
+
+
+def test_choose_concurrency_deterministic_and_clamped():
+    assert choose_concurrency(20000) == 512
+    assert choose_concurrency(300) == 300       # never exceeds n
+    assert choose_concurrency(10_000_000) == 64  # floor
+    assert choose_concurrency(1) == 1
+    with pytest.raises(ValueError):
+        choose_concurrency(0)
+
+
+def test_autotune_requires_fingerprints(plans):
+    with pytest.raises(ValueError, match="fingerprints"):
+        autotune_partition(plans["grid2d"].pattern, None, OPTS)
+
+
+# ---------------------------------------------------------------------------
+# observability: blocking.* / tune.* metrics land when tracing
+# ---------------------------------------------------------------------------
+
+def test_blocking_and_tune_metrics_recorded(plans):
+    plan = plans["circuit"]
+    reg = repro.obs.registry()
+    reg.reset()
+    with repro.obs.tracing():
+        replan(plan, OPTS.replace(autotune=True))
+    snap = reg.snapshot()
+    assert snap["counters"]["tune.candidates"] > 0
+    assert snap["counters"]["blocking.merges"] >= 0
+    assert "blocking.panels_after" in snap["gauges"]
+    assert "tune.modeled_s" in snap["gauges"]

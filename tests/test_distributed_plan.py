@@ -422,6 +422,130 @@ def test_device_merge_matches_host_merge_on_one_device():
     _assert_fingerprints_equal(merged, fp)
 
 
+# ---------------------------------------------------------------------------
+# blocked / autotuned plan cross-process replay (DESIGN.md §16): the chosen
+# knobs and merged partition are frozen onto the pickled plan, so factorize
+# and solve digests must replay bitwise in a different process
+# ---------------------------------------------------------------------------
+
+_BLOCKED_SCRIPT = r"""
+import sys, json, pickle, hashlib
+import numpy as np
+
+plan_out = sys.argv[1]
+
+from repro.api import LUOptions, analyze
+from repro.sparse import (
+    banded_full, banded_random, bordered_block_diagonal, chemical_like,
+    circuit_like, economic_like, grid2d_laplacian, grid3d_laplacian,
+    permute_csr, random_pattern, rcm_order,
+)
+from repro.sparse.numeric import generic_values_csr
+
+__GEN_SRC__
+
+def digest(*arrays):
+    h = hashlib.sha256()
+    for arr in arrays:
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+CASES = {
+    "blocked": LUOptions(concurrency=32, supernode_relax=2, blocking=True),
+    "autotuned": LUOptions(concurrency=32, autotune=True),
+}
+out = {}
+plans = {}
+for name in ("circuit", "bbd", "grid2d"):
+    a = GENERATORS[name]()
+    a = permute_csr(a, rcm_order(a))
+    values = generic_values_csr(a)
+    rng = np.random.default_rng(0)
+    b1 = rng.standard_normal(a.n)
+    bk = rng.standard_normal((a.n, 3))
+    for case, opts in CASES.items():
+        plan = analyze(a, opts)
+        factor = plan.factorize(values)
+        out[f"{name}/{case}"] = {
+            "factors": digest(*factor.num.store.blocks),
+            "solve": digest(factor.solve(b1).x, factor.solve(bk).x),
+            "n_panels": plan.n_supernodes,
+            "chosen": (plan.tuned.chosen if plan.tuned is not None
+                       else None),
+        }
+        plans[f"{name}/{case}"] = plan
+with open(plan_out, "wb") as f:
+    pickle.dump(plans, f)
+print("RESULT " + json.dumps(out))
+""".replace("__GEN_SRC__", _GEN_SRC)
+
+
+@pytest.fixture(scope="module")
+def blocked_conformance(tmp_path_factory):
+    """One subprocess that analyzes with blocking / autotune on, digests
+    its factors + solves, and pickles every plan for the parent."""
+    tmp = tmp_path_factory.mktemp("blocked_plan")
+    script = tmp / "blocked.py"
+    script.write_text(_BLOCKED_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    plan_path = tmp / "plans.pkl"
+    proc = subprocess.run(
+        [sys.executable, str(script), str(plan_path)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):]), plan_path
+
+
+def test_blocked_plans_replay_bitwise_across_processes(blocked_conformance):
+    """Every pickled blocked/autotuned plan factorizes and solves in THIS
+    process to exactly the digests the analyzing process recorded — the
+    frozen partition + knobs leave nothing host- or process-dependent."""
+    from repro.sparse.numeric import generic_values_csr
+
+    digests, plan_path = blocked_conformance
+    with open(plan_path, "rb") as f:
+        plans = pickle.load(f)
+    assert sorted(plans) == sorted(digests)
+    for key, plan in sorted(plans.items()):
+        values = generic_values_csr(plan.a)
+        factor = plan.factorize(values)
+        assert _digest(*factor.num.store.blocks) == \
+            digests[key]["factors"], key
+        rng = np.random.default_rng(0)
+        b1 = rng.standard_normal(plan.n)
+        bk = rng.standard_normal((plan.n, 3))
+        assert _digest(factor.solve(b1).x, factor.solve(bk).x) == \
+            digests[key]["solve"], key
+        assert plan.n_supernodes == digests[key]["n_panels"], key
+
+
+def test_autotuned_plans_freeze_chosen_knobs(blocked_conformance):
+    """The subprocess's TuneReport survives pickling with the chosen knob
+    values applied to the plan's options (replay never re-tunes)."""
+    digests, plan_path = blocked_conformance
+    with open(plan_path, "rb") as f:
+        plans = pickle.load(f)
+    for key, plan in sorted(plans.items()):
+        if not key.endswith("/autotuned"):
+            assert plan.tuned is None
+            continue
+        assert plan.tuned is not None
+        assert plan.tuned.chosen == digests[key]["chosen"], key
+        assert plan.options.blocking is True
+        assert plan.options.supernode_relax == \
+            plan.tuned.chosen["supernode_relax"]
+        # replanning the loaded plan with its own (frozen) options
+        # reproduces the same partition without re-running autotune
+        from repro.api import replan
+
+        re = replan(plan, plan.options.replace(autotune=False))
+        assert np.array_equal(re.schedule.supernodes,
+                              plan.schedule.supernodes), key
+
+
 def test_ownership_mask_covers_every_source_once():
     for n, d in ((10, 4), (17, 8), (3, 8), (64, 3)):
         mat = assign_sources(n, d)

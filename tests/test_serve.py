@@ -111,6 +111,46 @@ def test_cache_rejects_bad_capacity():
         SolverEngine(OPTS, batch_slots=0)
 
 
+def test_cache_is_thread_safe_under_contention():
+    """Concurrent get/put from many threads must never corrupt the LRU
+    state (regression: the unlocked OrderedDict could double-evict or die
+    in move_to_end when recency updates interleaved with eviction)."""
+    import threading
+
+    keys = _keys(32)
+    cache = PlanCache(capacity=8)
+    errors = []
+    start = threading.Barrier(8)
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            start.wait()
+            for _ in range(2000):
+                k = keys[rng.integers(len(keys))]
+                if rng.random() < 0.5:
+                    cache.put(k, f"plan-{k.h1}")
+                else:
+                    got = cache.get(k)
+                    if got is not None:
+                        assert got == f"plan-{k.h1}"
+        except Exception as exc:   # pragma: no cover - only on regression
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # invariants survive the storm: within capacity, keys() consistent
+    assert len(cache) <= 8
+    ks = cache.keys()
+    assert len(ks) == len(set(ks)) == len(cache)
+    for k in ks:
+        assert cache.get(k) == f"plan-{k.h1}"
+
+
 # ---------------------------------------------------------------------------
 # SolverEngine: end-to-end vs the sequential session API
 # ---------------------------------------------------------------------------
